@@ -1,0 +1,156 @@
+"""Roofline analysis (deliverable g): derive the three terms per
+(arch × shape × mesh) from the dry-run artifacts + the analytic model.
+
+  compute    = FLOPs / (chips × 197 TFLOP/s)
+  memory     = HBM bytes / (chips × 819 GB/s)
+  collective = collective bytes / (chips × 50 GB/s/link)
+
+FLOPs/HBM come from benchmarks.flops_model (closed-form; XLA's CPU
+cost_analysis undercounts scan bodies — recorded alongside for
+cross-checking).  Collective bytes come from the optimized-HLO parse:
+top-level bytes + loop-body bytes × layer-scan trip count.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import HybridConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from benchmarks import flops_model as FM
+
+
+def _trip_count(cfg) -> int:
+    """Trip count of the dominant (layer) scan."""
+    if cfg.arch_type == "hybrid":
+        pat = (cfg.hybrid or HybridConfig()).pattern
+        return max(cfg.n_layers // len(pat), 1)
+    return max(cfg.n_layers, 1)
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    block_skip = rec.get("tag", "baseline") != "baseline" and \
+        "skip" in rec.get("tag", "")
+
+    flops_total = FM.step_flops(cfg, shape, block_skip=block_skip)
+    t_compute = flops_total / (chips * PEAK_FLOPS_BF16)
+
+    hbm = FM.hbm_bytes(cfg, shape, chips=chips)
+    t_memory = hbm / HBM_BW
+
+    cb = rec.get("collective_bytes", {})
+    cl = rec.get("collective_bytes_in_loop", {})
+    if "error" in cb:
+        coll = 0.0
+    else:
+        trips = _trip_count(cfg)
+        coll = sum(cb.values()) + trips * sum(cl.values())
+    t_coll = coll / ICI_BW            # bytes already per-device (SPMD HLO)
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = FM.model_flops_per_token(cfg)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.mode != "decode" else 1)
+    model_flops = mf * tokens * (1.0 if shape.mode == "train" else 1 / 3)
+    useful = model_flops / flops_total if flops_total else 0.0
+
+    temp = rec.get("memory_analysis", {}).get("temp_size_in_bytes")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", "baseline"),
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_flops": flops_total,
+        "model_flops": model_flops,
+        "useful_frac": useful,
+        "collective_bytes_dev": coll,
+        "hbm_bytes_dev": hbm,
+        "temp_bytes_dev": temp,
+        "cost_analysis_flops": rec.get("cost_analysis", {}).get("flops"),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def load_all(dir_: str, tag: str = "baseline") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "baseline") != tag:
+            continue
+        row = analyze_record(rec)
+        if row:
+            out.append(row)
+        elif rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "dominant": "skipped",
+                        "reason": rec.get("reason", "")})
+    return out
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s "
+           "| dominant | useful | temp GB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["dominant"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped | — | — |")
+            continue
+        temp = r.get("temp_bytes_dev")
+        temp_s = f"{temp/1e9:.1f}" if temp else "?"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['dominant']}** | "
+            f"{r['useful_frac']:.2f} | {temp_s} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.dir, args.tag)
+    print(fmt_table(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    # headline: worst pairs per selection criteria (single-pod only)
+    ok = [r for r in rows if r["dominant"] != "skipped"
+          and r["mesh"] == "16x16"]
+    if ok:
+        worst_useful = min(ok, key=lambda r: r["useful_frac"])
+        most_coll = max(ok, key=lambda r: (r["t_collective_s"]
+                                           / max(max(r["t_compute_s"],
+                                                     r["t_memory_s"]),
+                                                 1e-12)))
+        print(f"\nworst useful-FLOP fraction: {worst_useful['arch']} × "
+              f"{worst_useful['shape']} ({worst_useful['useful_frac']:.2f})")
+        print(f"most collective-bound: {most_coll['arch']} × "
+              f"{most_coll['shape']} "
+              f"(coll/max(comp,mem) = "
+              f"{most_coll['t_collective_s']/max(max(most_coll['t_compute_s'],most_coll['t_memory_s']),1e-12):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""60-second tour: train a tiny LM with Seesaw vs cosine and see the
+paper's effect — same loss trajectory in tokens, ~25% fewer serial steps
+at this cut depth (→36% at the paper's α=1.1 depth, Lemma 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.train.trainer import Trainer
+
+MODEL = ModelConfig(name="quickstart", arch_type="dense", n_layers=2,
+                    d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                    d_ff=256, vocab_size=512, max_seq_len=64,
+                    rope_theta=1e4)
+
+
+def train(kind: str):
+    cfg = RunConfig(
+        model=MODEL,
+        schedule=ScheduleConfig(kind=kind, base_lr=3e-3, alpha=2.0,
+                                n_cuts=4),
+        optimizer=OptimizerConfig(kind="adamw", beta1=0.9, beta2=0.95),
+        seq_len=64, global_batch_size=8, total_tokens=64 * 8 * 150,
+        remat=False)
+    tr = Trainer(cfg)
+    print(f"\n=== {kind}: {len(tr.plan.phases)} phases, "
+          f"batches {tr.plan.batch_sizes()} ===")
+    loader = PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, cfg.seq_len)
+    hist = tr.run(loader, log_cb=lambda r: print(
+        f"  step {r['step']:4d}  B={r['batch_size']:3d} "
+        f"lr={r['lr']:.2e}  loss={r['loss']:.4f}"))
+    return hist
+
+
+if __name__ == "__main__":
+    h_cos = train("cosine")
+    h_see = train("seesaw")
+    lc = np.mean([h["loss"] for h in h_cos[-5:]])
+    ls = np.mean([h["loss"] for h in h_see[-5:]])
+    print(f"\ncosine : {len(h_cos)} steps, final loss {lc:.4f}")
+    print(f"seesaw : {len(h_see)} steps, final loss {ls:.4f}")
+    print(f"serial-step reduction: {1 - len(h_see)/len(h_cos):.1%} "
+          f"(Lemma 1 limit: 36.3%)")

@@ -1,0 +1,3 @@
+"""repro — production-grade JAX reproduction of "Seesaw: Accelerating
+Training by Balancing Learning Rate and Batch Size Scheduling"."""
+__version__ = "1.0.0"

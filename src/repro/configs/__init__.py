@@ -1,0 +1,48 @@
+"""Config registry: ``get_config('<arch-id>')`` for every assigned
+architecture (exact published hyperparameters) plus the paper's own
+150M/300M/600M presets."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (INPUT_SHAPES, HybridConfig, InputShape,
+                                ModelConfig, MoEConfig, OptimizerConfig,
+                                RunConfig, ScheduleConfig, SSMConfig)
+
+_MODULES: Dict[str, str] = {
+    "mistral-nemo-12b":        "repro.configs.mistral_nemo_12b",
+    "llama3.2-3b":             "repro.configs.llama3_2_3b",
+    "seamless-m4t-medium":     "repro.configs.seamless_m4t_medium",
+    "recurrentgemma-9b":       "repro.configs.recurrentgemma_9b",
+    "yi-34b":                  "repro.configs.yi_34b",
+    "phi3.5-moe-42b-a6.6b":    "repro.configs.phi3_5_moe",
+    "granite-moe-1b-a400m":    "repro.configs.granite_moe_1b",
+    "internvl2-76b":           "repro.configs.internvl2_76b",
+    "mamba2-2.7b":             "repro.configs.mamba2_2_7b",
+    "starcoder2-3b":           "repro.configs.starcoder2_3b",
+    "seesaw-150m":             "repro.configs.seesaw_paper",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "seesaw-150m"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ("seesaw-300m", "seesaw-600m"):
+        mod = importlib.import_module("repro.configs.seesaw_paper")
+        return {"seesaw-300m": mod.SEESAW_300M,
+                "seesaw-600m": mod.SEESAW_600M}[name]
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES) + ["seesaw-300m", "seesaw-600m"]
+
+
+__all__ = [
+    "ASSIGNED_ARCHS", "INPUT_SHAPES", "HybridConfig", "InputShape",
+    "ModelConfig", "MoEConfig", "OptimizerConfig", "RunConfig",
+    "ScheduleConfig", "SSMConfig", "get_config", "list_archs",
+]

@@ -1,0 +1,25 @@
+"""InternVL2-Llama3-76B language backbone [arXiv:2404.16821].
+
+VLM: InternViT-6B vision encoder + MLP projector (STUB — ``input_specs``
+provides projected patch embeddings) feeding a Llama-3-70B-class decoder:
+80L, d_model=8192, 64 heads (GQA kv=8), d_ff=28672, vocab=128256.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    arch_type="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    max_seq_len=32768,
+    rope_theta=500_000.0,
+    act="silu",
+    frontend_tokens=1024,       # ViT patches per image after projector
+    frontend_dim=8192,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,27 @@
+"""SeamlessM4T-medium text backbone [arXiv:2308.11596].
+
+Encoder-decoder transformer, 12L each, d_model=1024, 16 heads (kv=16,
+i.e. MHA), d_ff=4096, vocab=256206 (padded to 256256 for the model axis).
+The speech frontend (mel + conv w2v-BERT feature extractor) is a STUB —
+``input_specs`` provides precomputed frame embeddings (B, frames, 1024).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    n_layers=12,                # decoder layers
+    n_encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    max_seq_len=32768,
+    rope_theta=10_000.0,
+    act="gelu",
+    frontend_tokens=1024,       # audio frames consumed per example
+    frontend_dim=1024,
+    source="arXiv:2308.11596",
+)

@@ -1,0 +1,9 @@
+from repro.core import adaptive, cbs, schedules, seesaw, theory
+from repro.core.seesaw import (Phase, SeesawPlan, build_plan,
+                               divergence_risk, effective_lr_ratio,
+                               measured_speedup, theoretical_speedup)
+
+__all__ = ["adaptive", "cbs", "schedules", "seesaw", "theory",
+           "Phase", "SeesawPlan",
+           "build_plan", "divergence_risk", "effective_lr_ratio",
+           "measured_speedup", "theoretical_speedup"]

@@ -1,0 +1,76 @@
+"""Adaptive Seesaw (beyond-paper): measurement-triggered cuts.
+
+The paper derives Seesaw's cut points from where a *reference cosine*
+would decay by α.  This variant instead watches the quantity the theory
+actually cares about — the variance-dominated gradient norm
+E‖g‖² ≈ σ²Tr(H)/B (Assumption 2) — and fires a (√α LR cut, ×α batch
+ramp) whenever the smoothed loss plateaus, i.e. when the current phase
+has extracted its bias reduction and the iterate noise floor dominates
+(the regime where Assumption 1 holds and the equivalence applies).
+
+This removes the need to know the total token budget in advance — the
+schedule becomes budget-free, which matters for continued-pretraining
+runs.  Validated on the exact recursions in tests/test_adaptive.py: the
+adaptive trigger lands its cuts near the cosine-derived points and
+matches the final risk of the prescheduled Seesaw within a constant
+factor (Corollary 1 applies phase-by-phase regardless of *when* the
+cuts fire, as long as α√β is maintained).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class AdaptiveSeesaw:
+    """Plateau-triggered Seesaw controller.
+
+    Feed ``observe(loss)`` once per step; read ``lr_scale`` /
+    ``batch_multiplier``.  A cut fires when the EMA'd loss improvement
+    per window drops below ``rel_threshold`` of the loss scale.
+    """
+    alpha: float = 2.0                 # reference decay per cut
+    window: int = 50                   # steps per plateau test
+    rel_threshold: float = 2e-3        # relative improvement floor
+    max_cuts: int = 12
+    min_steps_between: int = 50
+    # state -------------------------------------------------------------
+    n_cuts: int = 0
+    steps: int = 0
+    last_cut_step: int = 0
+    _window_losses: List[float] = field(default_factory=list)
+    _prev_window_mean: Optional[float] = None
+    cut_steps: List[int] = field(default_factory=list)
+
+    @property
+    def lr_scale(self) -> float:
+        return math.sqrt(self.alpha) ** (-self.n_cuts)
+
+    @property
+    def batch_multiplier(self) -> float:
+        return self.alpha ** self.n_cuts
+
+    def observe(self, loss: float) -> bool:
+        """Returns True if a cut fires at this step."""
+        self.steps += 1
+        self._window_losses.append(float(loss))
+        if len(self._window_losses) < self.window:
+            return False
+        mean = sum(self._window_losses) / len(self._window_losses)
+        self._window_losses.clear()
+        fired = False
+        if (self._prev_window_mean is not None
+                and self.n_cuts < self.max_cuts
+                and self.steps - self.last_cut_step
+                >= self.min_steps_between):
+            improvement = self._prev_window_mean - mean
+            scale = max(abs(self._prev_window_mean), 1e-12)
+            if improvement < self.rel_threshold * scale:
+                self.n_cuts += 1
+                self.last_cut_step = self.steps
+                self.cut_steps.append(self.steps)
+                fired = True
+        self._prev_window_mean = mean
+        return fired

@@ -1,0 +1,99 @@
+"""Learning-rate schedules and the step-decay approximation of cosine.
+
+The paper (§3.2) approximates cosine decay by a step-decay that cuts the
+LR by α at the token counts where the cosine would have decayed by α;
+Seesaw then replaces each α-cut with (√α-cut, ×α batch).  All schedule
+math is in *tokens* so it is batch-size independent — exactly what makes
+the ramp a drop-in.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cosine_lr(base_lr: float, total_tokens: float, warmup_tokens: float,
+              final_frac: float = 0.0) -> Callable[[float], float]:
+    """LR as a function of tokens consumed (paper: η(t)=η₀cos(πt/2T) after
+    10% warmup; we use the conventional half-cosine to final_frac and
+    also provide the paper's quarter-cosine via ``quarter=True`` in
+    :func:`cosine_cut_points`)."""
+
+    def lr(tok):
+        tok = jnp.asarray(tok, jnp.float32)
+        warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
+        prog = jnp.clip((tok - warmup_tokens)
+                        / jnp.maximum(total_tokens - warmup_tokens, 1.0),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(tok < warmup_tokens, warm, base_lr * cos)
+
+    return lr
+
+
+def quarter_cosine_lr(base_lr: float, total_tokens: float,
+                      warmup_tokens: float) -> Callable[[float], float]:
+    """The paper's Lemma-1 form: η(t) = η₀ cos(π t / 2T) (decays to 0)."""
+
+    def lr(tok):
+        tok = jnp.asarray(tok, jnp.float32)
+        warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
+        prog = jnp.clip((tok - warmup_tokens)
+                        / jnp.maximum(total_tokens - warmup_tokens, 1.0),
+                        0.0, 1.0)
+        return jnp.where(tok < warmup_tokens, warm,
+                         base_lr * jnp.cos(0.5 * jnp.pi * prog))
+
+    return lr
+
+
+def cosine_cut_points(total_tokens: float, warmup_tokens: float,
+                      alpha: float, n_cuts: int,
+                      quarter: bool = True) -> List[float]:
+    """Token counts where the cosine schedule's LR first falls below
+    η₀/α^k, k = 1..n_cuts — the ``S`` array fed to Seesaw (Algorithm 1).
+
+    quarter=True uses η₀cos(πt/2T) (paper Lemma 1); else half-cosine.
+    """
+    span = total_tokens - warmup_tokens
+    cuts = []
+    for k in range(1, n_cuts + 1):
+        target = alpha ** (-k)
+        if quarter:
+            # cos(pi/2 * p) = target  →  p = 2/pi * acos(target)
+            p = 2.0 / math.pi * math.acos(target)
+        else:
+            # 0.5(1+cos(pi p)) = target
+            p = math.acos(2 * target - 1) / math.pi
+        tok = warmup_tokens + p * span
+        if tok < total_tokens:
+            cuts.append(tok)
+    return cuts
+
+
+def step_decay_lr(base_lr: float, cut_tokens: Sequence[float],
+                  alpha: float, warmup_tokens: float) -> Callable:
+    """Step-decay: LR = η₀ α^{-k} after the k-th cut (token-indexed)."""
+    cuts = np.asarray(list(cut_tokens), np.float32)
+
+    def lr(tok):
+        tok = jnp.asarray(tok, jnp.float32)
+        k = jnp.sum(tok[..., None] >= cuts, axis=-1) if cuts.size \
+            else jnp.zeros_like(tok)
+        warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
+        return jnp.where(tok < warmup_tokens, warm,
+                         base_lr * (alpha ** (-k.astype(jnp.float32))))
+
+    return lr
+
+
+def constant_lr(base_lr: float, warmup_tokens: float = 0.0) -> Callable:
+    def lr(tok):
+        tok = jnp.asarray(tok, jnp.float32)
+        warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
+        return jnp.where(tok < warmup_tokens, warm, base_lr)
+
+    return lr

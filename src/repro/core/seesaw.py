@@ -1,0 +1,208 @@
+"""Seesaw (Algorithm 1) as a first-class runtime object.
+
+A :class:`SeesawPlan` is the compiled form of a token-indexed LR×batch
+schedule: an ordered list of :class:`Phase` (token budget, per-step LR
+multiplier curve, batch size).  The trainer walks phases, re-jitting the
+train step once per distinct batch size.
+
+Guarantees enforced here (paper §3):
+- token conservation: Σ phase tokens == total tokens, ramp or no ramp;
+- the Lemma-4 feasibility constraint α ≥ √β (raises on violation);
+- the equivalence invariant: a Seesaw plan and its reference step-decay
+  plan have identical α√β product (Corollary 1).
+
+``theoretical_speedup`` implements Lemma 1 (cosine → 2/π serial steps).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.core import schedules as S
+
+
+@dataclass(frozen=True)
+class Phase:
+    index: int
+    start_tokens: float
+    end_tokens: float
+    lr_scale: float              # multiplier on base_lr during this phase
+    batch_size: int              # global batch (sequences)
+
+    @property
+    def tokens(self) -> float:
+        return self.end_tokens - self.start_tokens
+
+    def n_steps(self, seq_len: int) -> int:
+        return max(int(round(self.tokens / (self.batch_size * seq_len))), 1)
+
+
+@dataclass(frozen=True)
+class SeesawPlan:
+    base_lr: float
+    warmup_tokens: float
+    total_tokens: float
+    phases: List[Phase]
+    alpha: float                 # LR cut factor per phase boundary
+    beta: float                  # batch multiplier per phase boundary
+    kind: str = "seesaw"
+
+    # ------------------------------------------------------------------ #
+    def steps_per_phase(self, seq_len: int) -> List[int]:
+        """Allocate whole steps to phases with a token carry so that the
+        total token budget is conserved exactly (±1 step) regardless of
+        the ramp — the equal-FLOPs comparison depends on this."""
+        out = []
+        carry = 0.0
+        for i, p in enumerate(self.phases):
+            tok_per_step = p.batch_size * seq_len
+            avail = p.tokens + carry
+            if i == len(self.phases) - 1:
+                steps = int(math.floor(avail / tok_per_step + 0.5))
+            else:
+                steps = int(avail // tok_per_step)
+            out.append(steps)
+            carry = avail - steps * tok_per_step
+        return out
+
+    def total_steps(self, seq_len: int) -> int:
+        return sum(self.steps_per_phase(seq_len))
+
+    def total_tokens_scheduled(self, seq_len: int) -> float:
+        return sum(s * p.batch_size * seq_len for s, p in
+                   zip(self.steps_per_phase(seq_len), self.phases))
+
+    def batch_sizes(self) -> List[int]:
+        return [p.batch_size for p in self.phases]
+
+    def phase_at_tokens(self, tok: float) -> Phase:
+        for p in self.phases:
+            if tok < p.end_tokens:
+                return p
+        return self.phases[-1]
+
+    def lr_at(self, tok: float) -> float:
+        if tok < self.warmup_tokens:
+            return self.base_lr * tok / max(self.warmup_tokens, 1.0)
+        return self.base_lr * self.phase_at_tokens(tok).lr_scale
+
+    def validate(self):
+        assert self.phases, "empty plan"
+        tol = 1e-6 * self.total_tokens
+        assert abs(self.phases[-1].end_tokens - self.total_tokens) <= tol
+        for a, b in zip(self.phases, self.phases[1:]):
+            assert abs(a.end_tokens - b.start_tokens) <= tol
+            assert b.batch_size >= a.batch_size, "batch must not shrink"
+        if self.beta > 1.0 and self.alpha < math.sqrt(self.beta) - 1e-9:
+            raise ValueError(
+                f"divergent ramp (Lemma 4): alpha={self.alpha} < "
+                f"sqrt(beta)={math.sqrt(self.beta)}")
+        return self
+
+
+def divergence_risk(alpha: float, beta: float) -> bool:
+    """Lemma 4: the effective NSGD LR scales by (√β/α) per cut — a ramp
+    with α < √β grows the effective LR without bound."""
+    return alpha < math.sqrt(beta) - 1e-12
+
+
+def effective_lr_ratio(alpha: float, beta: float, k: int) -> float:
+    """η̃_k/η̃_0 for NSGD under Assumption 2:  (√β/α)^k."""
+    return (math.sqrt(beta) / alpha) ** k
+
+
+# --------------------------------------------------------------------- #
+# plan builders
+# --------------------------------------------------------------------- #
+
+def build_plan(*, kind: str, base_lr: float, total_tokens: float,
+               warmup_frac: float, b0: int, alpha: float = 2.0,
+               beta: Optional[float] = None, n_cuts: int = 8,
+               max_batch_size: Optional[int] = None,
+               cut_tokens: Optional[Sequence[float]] = None,
+               quarter_cosine: bool = True) -> SeesawPlan:
+    """Build the phase plan for any of the paper's schedulers.
+
+    kind:
+      'cosine'        — single phase, batch B0, cosine LR (continuous;
+                        lr_scale recorded as 1.0, trainer evaluates the
+                        continuous curve).
+      'step'          — the α-step-decay approximation of cosine (β=1).
+      'seesaw'        — Algorithm 1: cut √α, batch ×α  (α_s=√α, β=α keeps
+                        α_s√β = α = the step-decay's α·√1 product).
+      'seesaw-general'— arbitrary (α, β) on the equivalence line
+                        (validated against Lemma 4).
+      'constant'      — constant LR, constant batch (Figure 5 baseline).
+      'naive-ramp'    — constant LR, batch ×β per cut (Figure 5 blue).
+    """
+    warmup = warmup_frac * total_tokens
+    if cut_tokens is None:
+        cut_tokens = S.cosine_cut_points(total_tokens, warmup, alpha,
+                                         n_cuts, quarter=quarter_cosine)
+    cuts = [c for c in cut_tokens if warmup < c < total_tokens]
+
+    if kind == "cosine":
+        phases = [Phase(0, 0.0, total_tokens, 1.0, b0)]
+        return SeesawPlan(base_lr, warmup, total_tokens, phases,
+                          alpha=1.0, beta=1.0, kind=kind).validate()
+
+    if kind == "constant":
+        lr_cut, b_mult = 1.0, 1.0
+    elif kind == "step":
+        lr_cut, b_mult = alpha, 1.0
+    elif kind == "seesaw":
+        lr_cut, b_mult = math.sqrt(alpha), alpha
+    elif kind == "seesaw-general":
+        assert beta is not None
+        lr_cut, b_mult = alpha, beta
+    elif kind == "naive-ramp":
+        assert beta is not None
+        lr_cut, b_mult = 1.0, beta
+    else:
+        raise ValueError(kind)
+
+    bounds = [0.0] + list(cuts) + [total_tokens]
+    phases = []
+    b = float(b0)
+    for i in range(len(bounds) - 1):
+        bs = int(round(b))
+        if max_batch_size:
+            bs = min(bs, max_batch_size)
+        phases.append(Phase(i, bounds[i], bounds[i + 1],
+                            lr_cut ** (-i), bs))
+        b *= b_mult
+    plan = SeesawPlan(base_lr, warmup, total_tokens, phases,
+                      alpha=lr_cut, beta=b_mult, kind=kind)
+    if kind in ("seesaw", "seesaw-general"):
+        plan.validate()
+    return plan
+
+
+# --------------------------------------------------------------------- #
+# Lemma 1
+# --------------------------------------------------------------------- #
+
+def theoretical_speedup() -> float:
+    """Lemma 1: serial-step reduction of Seesaw vs quarter-cosine in the
+    continuous limit = 1 − 2/π ≈ 0.3634."""
+    return 1.0 - 2.0 / math.pi
+
+
+def measured_speedup(plan_seesaw: SeesawPlan, plan_ref: SeesawPlan,
+                     seq_len: int) -> float:
+    s, r = plan_seesaw.total_steps(seq_len), plan_ref.total_steps(seq_len)
+    return 1.0 - s / r
+
+
+def continuous_step_fraction(n_cuts: int, alpha: float = 2.0) -> float:
+    """Discrete-plan approximation of ∫cos: with cut points where a
+    quarter-cosine crosses α^{-k}, Seesaw's per-phase batch grows ×α, so
+    steps shrink ×α per phase; the fraction of baseline steps is
+    Σ w_k α^{-k} with w_k the token fraction of phase k."""
+    cuts = S.cosine_cut_points(1.0, 0.0, alpha, n_cuts, quarter=True)
+    bounds = [0.0] + cuts + [1.0]
+    frac = 0.0
+    for k in range(len(bounds) - 1):
+        frac += (bounds[k + 1] - bounds[k]) * alpha ** (-k)
+    return frac

@@ -1,0 +1,4 @@
+from repro.data.synthetic import LinearRegressionSampler, MarkovLM
+from repro.data.pipeline import PhaseDataLoader
+
+__all__ = ["LinearRegressionSampler", "MarkovLM", "PhaseDataLoader"]

@@ -1,0 +1,53 @@
+"""Phase-aware data loading: follows a SeesawPlan's batch ramp, shards
+batches onto the mesh, and guarantees equal-token data order across
+schedulers (same underlying stream, different batch partitioning)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.seesaw import SeesawPlan
+from repro.data.synthetic import MarkovLM
+
+
+class PhaseDataLoader:
+    """Iterates (phase, step, batch) over a plan.
+
+    The token stream is indexed by absolute sequence number, so a cosine
+    run (constant B) and a Seesaw run (ramped B) consume identical
+    sequences in identical order at equal token counts.
+    """
+
+    def __init__(self, source: MarkovLM, plan: SeesawPlan, seq_len: int,
+                 mesh=None, multi_pod: bool = False):
+        self.source = source
+        self.plan = plan
+        self.seq_len = seq_len
+        self.mesh = mesh
+        self.multi_pod = multi_pod
+
+    def _shard(self, batch: Dict[str, np.ndarray]):
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        axes = ("pod", "data") if self.multi_pod else ("data",)
+        out = {}
+        for k, v in batch.items():
+            spec = P(axes, *([None] * (v.ndim - 1)))
+            out[k] = jax.device_put(
+                v, NamedSharding(self.mesh, spec))
+        return out
+
+    def __iter__(self) -> Iterator[Tuple[Any, int, Dict[str, Any]]]:
+        seq_cursor = 0        # absolute sequence index into the stream
+        steps = self.plan.steps_per_phase(self.seq_len)
+        for phase, n_steps in zip(self.plan.phases, steps):
+            for s in range(n_steps):
+                batch = self.source.sample(seq_cursor, phase.batch_size,
+                                           self.seq_len)
+                seq_cursor += phase.batch_size
+                yield phase, s, self._shard(batch)

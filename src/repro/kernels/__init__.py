@@ -1,0 +1,3 @@
+from repro.kernels import flash_attention, ops, ref, rmsnorm, ssd
+
+__all__ = ["flash_attention", "ops", "ref", "rmsnorm", "ssd"]

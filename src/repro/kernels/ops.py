@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels with automatic fallback.
+
+On TPU the Pallas path compiles natively; elsewhere (this CPU container)
+``interpret=True`` executes the kernel body for correctness validation.
+``use_pallas=False`` (or the REPRO_NO_PALLAS env var) routes to the
+pure-jnp reference — that is the path the distributed dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd as _ssd
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    use_pallas: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
+        return _ref.attention_ref(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, use_pallas: bool = True,
+            block_rows: int = 256):
+    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
+        return _ref.rmsnorm_ref(x, scale, eps)
+    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=_interpret())
+
+
+def ssd(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
+        use_pallas: bool = True):
+    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
+        return _ref.ssd_ref(xh, dt, A, Bm, Cm, D)
+    return _ssd.ssd_full(xh, dt, A, Bm, Cm, D, chunk=chunk,
+                         interpret=_interpret())

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel — ground truth for the
+shape/dtype sweep tests (assert_allclose against these)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,H,S,hd); k,v: (B,Hkv,S,hd).  Naive softmax attention."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    """x: (..., d)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D):
+    """Naive sequential SSD recurrence (the definition).
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N); D: (H,).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t ;  y_t = C_t·h_t + D x_t.
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    B32 = Bm.astype(jnp.float32)
+    C32 = Cm.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dt32[:, t] * A)                       # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt32[:, t], B32[:, t],
+                         x32[:, t])
+        h = h * a[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, C32[:, t])
+        y = y + D[None, :, None] * x32[:, t]
+        return h, y
+
+    h = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                            # (B,S,H,P)
+    return y.astype(x.dtype), h

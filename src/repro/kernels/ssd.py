@@ -1,0 +1,150 @@
+"""Chunked Mamba-2 SSD as a Pallas TPU kernel.
+
+The hot part of SSD is the per-chunk quadratic form (masked C·Bᵀ kernel
+against the chunk's values) plus the chunk-state contraction — both are
+MXU matmuls over (Q × Q) and (Q × N) tiles.  The kernel computes, per
+(batch, chunk, head) grid cell with everything VMEM-resident:
+
+  y_intra[c]  = (CBᵀ ⊙ decay ⊙ dt) x[c]          (Q,P)
+  S_chunk[c]  = Σ_j exp(T_c − cum_j) dt_j B_j ⊗ x_j   (N,P)
+  T[c]        = Σ_j dt_j A                        scalar per head
+
+The cheap cross-chunk recurrence (nc sequential steps on (N,P) states)
+and the rank-1 inter-chunk correction stay in XLA — they are O(S·N·P)
+vs the kernel's O(S·Q·(N+P)) and do not benefit from manual tiling.
+
+VMEM per cell (Q=128, N=128, P=64, f32): x 32 KB + B/C 2·64 KB +
+masks/CB 2·64 KB + outputs ~96 KB ⇒ < 0.5 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref,
+                      t_ref):
+    """Blocks: x (Q,P); dt (Q,); a (1,) scalar A for this head;
+    b, c (Q,N); outputs y (Q,P), s (N,P), t (1,)."""
+    x = x_ref[0].astype(jnp.float32)                      # (Q,P)
+    dt = dt_ref[0].astype(jnp.float32)                    # (Q,)
+    A = a_ref[0]
+    Bm = b_ref[0].astype(jnp.float32)                     # (Q,N)
+    Cm = c_ref[0].astype(jnp.float32)
+
+    l = dt * A                                            # (Q,)
+    cum = jnp.cumsum(l)                                   # inclusive
+    T = cum[-1]
+
+    Q = x.shape[0]
+    diff = cum[:, None] - cum[None, :]                    # (i,j)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+    CB = Cm @ Bm.T                                        # (Q,Q) MXU
+    M = CB * decay * dt[None, :]
+    y_ref[0] = (M @ x).astype(y_ref.dtype)                # (Q,P) MXU
+
+    sdecay = jnp.exp(T - cum) * dt                        # (Q,)
+    s_ref[0] = ((Bm * sdecay[:, None]).T @ x).astype(s_ref.dtype)
+    t_ref[0] = T.astype(t_ref.dtype)
+
+
+def ssd_chunk(xh, dt, A, Bm, Cm, *, chunk: int = 128,
+              interpret: bool = False):
+    """Intra-chunk SSD terms via Pallas.
+
+    xh: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,);
+    Bm, Cm: (B,S,N).  S must be a multiple of ``chunk``.
+    Returns (y_intra (B,S,H,P), states (B,nc,H,N,P), T (B,nc,H)).
+    """
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0
+    nc = S // Q
+
+    # layout: (B, nc, H, Q, ...) so each grid cell is one (b, c, h)
+    x_l = jnp.moveaxis(xh.reshape(B, nc, Q, H, Pd), 3, 2) \
+        .reshape(B * nc * H, Q, Pd)
+    dt_l = jnp.moveaxis(dt.reshape(B, nc, Q, H), 3, 2) \
+        .reshape(B * nc * H, Q)
+    b_l = jnp.broadcast_to(Bm.reshape(B, nc, 1, Q, N),
+                           (B, nc, H, Q, N)).reshape(B * nc * H, Q, N)
+    c_l = jnp.broadcast_to(Cm.reshape(B, nc, 1, Q, N),
+                           (B, nc, H, Q, N)).reshape(B * nc * H, Q, N)
+    a_l = jnp.broadcast_to(A[None, None, :],
+                           (B, nc, H)).reshape(B * nc * H)
+
+    y, s, t = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(B * nc * H,),
+        in_specs=[
+            pl.BlockSpec((1, Q, Pd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q), lambda g: (g, 0)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, Pd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, N, Pd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nc * H, Q, Pd), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc * H, N, Pd), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc * H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_l, dt_l, a_l, b_l, c_l)
+
+    y = jnp.moveaxis(y.reshape(B, nc, H, Q, Pd), 2, 3).reshape(B, S, H, Pd)
+    s = s.reshape(B, nc, H, N, Pd)
+    t = t.reshape(B, nc, H)
+    return y, s, t
+
+
+def ssd_full(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
+             interpret: bool = False):
+    """Full SSD output: Pallas intra-chunk terms + XLA cross-chunk scan.
+    Mirrors models.mamba2.ssd_chunked (the oracle path)."""
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S += pad
+    nc = S // Q
+    y_intra, states, T = ssd_chunk(xh, dt, A, Bm, Cm, chunk=Q,
+                                   interpret=interpret)
+
+    def body(h, xs):
+        s_c, t_c = xs
+        h_prev = h
+        # states from the kernel are (N,P); carried state is (H,N,P)
+        h = h * jnp.exp(t_c)[:, :, None, None] + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+    h_fin, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(T, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,N,P)
+
+    cum = jnp.cumsum(dt.astype(jnp.float32).reshape(B, nc, Q, H)
+                     * A, axis=2)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         Cm.astype(jnp.float32).reshape(B, nc, Q, N),
+                         h_prevs, jnp.exp(cum))
+    y = y_intra.reshape(B, nc, Q, H, Pd) + y_inter
+    y = y.reshape(B, S, H, Pd) \
+        + D[None, None, :, None] * xh.astype(jnp.float32)
+    return y[:, :S_orig].astype(xh.dtype), h_fin.swapaxes(-1, -2)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state, so tests/benches keep their 1-CPU world while
+the dry-run (which sets xla_force_host_platform_device_count=512 before
+any import) builds the real topology.
+
+Target hardware: TPU v5e pods — 256 chips/pod, (16, 16) ICI torus;
+multi-pod adds a leading 'pod' axis over DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2,
+                   multi_pod: bool = False):
+    """Small mesh for CI-scale dry-run tests (8 host devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,128 @@
+"""Workload step functions + sharding trees for the dry-run and the real
+launcher: builds (fn, arg structs, in/out shardings) per (arch × shape ×
+mesh) without allocating anything (jax.eval_shape for params/opt state).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (InputShape, ModelConfig, OptimizerConfig)
+from repro.models import registry as R
+from repro.optim import optimizers as O
+
+# long_500k requires sub-quadratic decoding (DESIGN.md §6)
+LONG_CONTEXT_ARCHS = {"recurrentgemma-9b", "mamba2-2.7b", "starcoder2-3b"}
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_ARCHS:
+        return False, ("skipped: full-attention arch at 500k decode "
+                       "(see DESIGN.md §6)")
+    return True, ""
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: R.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_structs(cfg: ModelConfig, params_struct, kind: str = "adamw"):
+    opt = O.from_config(OptimizerConfig(kind=kind))
+    return opt, jax.eval_shape(opt.init, params_struct)
+
+
+def opt_state_specs(param_spec_tree, opt_state_struct):
+    """Mirror param specs onto m/v slots; scalars replicated."""
+    def spec_for(path_leaf, struct):
+        return path_leaf
+
+    out = {}
+    for k, v in opt_state_struct.items():
+        if k in ("m", "v", "mu"):
+            out[k] = param_spec_tree
+        else:
+            out[k] = P()
+    return out
+
+
+def build_workload(cfg: ModelConfig, shape: InputShape, *,
+                   multi_pod: bool = False, opt_kind: str = "adamw",
+                   z_loss: float = 0.0, remat: bool = True,
+                   block_skip: bool = False, seq_shard: bool = True,
+                   remat_policy: str = "", serve_resident: bool = False,
+                   cache_seq_shard: bool = False,
+                   dtype=jnp.bfloat16):
+    """Returns (fn, args tuple of ShapeDtypeStructs, in_shardings tuple,
+    out_shardings)."""
+    pspec = R.param_specs(cfg, multi_pod,
+                          serve_resident=(serve_resident and
+                                          shape.mode != "train"))
+    pstruct = param_structs(cfg)
+    ispec = R.input_shardings(cfg, shape, multi_pod,
+                              cache_seq_shard=cache_seq_shard)
+    istruct = R.input_specs(cfg, shape)
+
+    if shape.mode == "train":
+        opt, ostruct = opt_structs(cfg, pstruct, opt_kind)
+        ospec = opt_state_specs(pspec, ostruct)
+
+        def train_step(params, opt_state, batch, lr):
+            def loss_of(p):
+                return R.loss_fn(p, cfg, batch, z_loss=z_loss, dtype=dtype,
+                                 remat=remat, multi_pod=multi_pod,
+                                 block_skip=block_skip,
+                                 seq_shard=seq_shard,
+                                 remat_policy=remat_policy)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params)
+            new_params, new_opt = opt.update(grads, opt_state, params, lr)
+            return new_params, new_opt, metrics["loss"]
+
+        args = (pstruct, ostruct, istruct,
+                jax.ShapeDtypeStruct((), jnp.float32))
+        in_specs = (pspec, ospec, ispec, P())
+        out_specs = (pspec, ospec, P())
+        return train_step, args, in_specs, out_specs
+
+    if shape.mode == "prefill":
+        def prefill_step(params, batch):
+            tokens = batch["tokens"]
+            prefix = batch.get("prefix_emb")
+            logits, cache, ln = R.prefill(
+                params, cfg, tokens, prefix_emb=prefix,
+                cache_len_cap=shape.seq_len, dtype=dtype,
+                multi_pod=multi_pod)
+            return logits
+
+        args = (pstruct, istruct)
+        in_specs = (pspec, ispec)
+        b = ispec["tokens"]
+        out_specs = P(b[0], None, "model")
+        return prefill_step, args, in_specs, out_specs
+
+    # decode
+    def serve_step(params, cache, cache_len, token):
+        logits, new_cache, new_len = R.decode_step(
+            params, cfg, cache, cache_len, token, dtype=dtype,
+            multi_pod=multi_pod)
+        return logits, new_cache, new_len
+
+    args = (pstruct, istruct["cache"], istruct["cache_len"],
+            istruct["token"])
+    in_specs = (pspec, ispec["cache"], ispec["cache_len"], ispec["token"])
+    b = ispec["token"]
+    out_specs = (P(b[0], None, "model"), ispec["cache"], P())
+    return serve_step, args, in_specs, out_specs

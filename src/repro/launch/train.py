@@ -1,0 +1,100 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch seesaw-150m \
+        --schedule seesaw --steps 200 [--mesh 2x2] [--multipod]
+
+On real hardware the mesh comes from the platform; on this container a
+small host-device mesh (--host-devices N) exercises the identical pjit
+path.  The Seesaw runtime (per-phase compile cache, batch ramp, token-
+indexed LR) is the same object the quickstart example uses.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="seesaw-150m")
+    ap.add_argument("--schedule", default="seesaw",
+                    choices=["seesaw", "cosine", "step", "constant",
+                             "seesaw-general", "naive-ramp"])
+    ap.add_argument("--alpha", type=float, default=2.0)
+    ap.add_argument("--beta", type=float, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--total-tokens", type=int, default=None)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of the arch")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="simulate N devices on CPU (sets XLA_FLAGS)")
+    ap.add_argument("--mesh", default=None, help="e.g. 2x2 = data x model")
+    ap.add_argument("--z-loss", type=float, default=0.0)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax
+    from repro.configs import (OptimizerConfig, RunConfig, ScheduleConfig,
+                               get_config)
+    from repro.data import MarkovLM, PhaseDataLoader
+    from repro.train import checkpoint as CKPT
+    from repro.train.trainer import Trainer
+
+    model = get_config(args.arch)
+    if args.reduced:
+        model = model.reduced()
+    seq_len = args.seq_len or min(model.max_seq_len, 1024)
+    b0 = args.batch_size or 32
+    total = args.total_tokens or (
+        args.steps * b0 * seq_len if args.steps else 20 * model.param_count())
+
+    cfg = RunConfig(
+        model=model,
+        schedule=ScheduleConfig(kind=args.schedule, base_lr=args.lr,
+                                alpha=args.alpha,
+                                beta=args.beta or args.alpha),
+        optimizer=OptimizerConfig(kind=args.optimizer),
+        seq_len=seq_len, global_batch_size=b0, total_tokens=total,
+        z_loss=args.z_loss, seed=args.seed)
+
+    mesh = None
+    if args.mesh:
+        dims = [int(x) for x in args.mesh.split("x")]
+        names = ("data", "model")[:len(dims)] if len(dims) == 2 \
+            else ("pod", "data", "model")
+        mesh = jax.make_mesh(tuple(dims), names)
+
+    trainer = Trainer(cfg, mesh=mesh)
+    print(f"arch={model.name} N={model.param_count()/1e6:.0f}M "
+          f"schedule={args.schedule} phases={len(trainer.plan.phases)} "
+          f"steps={trainer.plan.total_steps(seq_len)} "
+          f"batches={trainer.plan.batch_sizes()}")
+    src = MarkovLM(vocab_size=min(model.vocab_size, 2048), seed=args.seed)
+    loader = PhaseDataLoader(src, trainer.plan, seq_len, mesh=mesh)
+
+    def log(rec):
+        print(f"step {rec['step']:5d} phase {rec['phase']} "
+              f"B={rec['batch_size']:4d} lr={rec['lr']:.2e} "
+              f"loss={rec['loss']:.4f} ({rec['wall']:.1f}s)")
+
+    hist = trainer.run(loader, max_steps=args.steps, log_cb=log)
+    print(f"done: {len(hist)} steps, final loss {hist[-1]['loss']:.4f}")
+    if args.checkpoint:
+        CKPT.save(args.checkpoint, trainer.state.params,
+                  trainer.state.opt_state, trainer.state.step,
+                  trainer.state.tokens_seen)
+        print(f"checkpoint → {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

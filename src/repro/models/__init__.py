@@ -1,0 +1,9 @@
+from repro.models import registry
+from repro.models.registry import (cache_struct, concrete_inputs,
+                                   decode_step, forward_hidden, init_params,
+                                   input_shardings, input_specs, loss_fn,
+                                   param_specs, prefill)
+
+__all__ = ["registry", "cache_struct", "concrete_inputs", "decode_step",
+           "forward_hidden", "init_params", "input_shardings",
+           "input_specs", "loss_fn", "param_specs", "prefill"]

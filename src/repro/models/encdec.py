@@ -1,0 +1,259 @@
+"""Encoder-decoder transformer backbone for seamless-m4t-medium
+(arXiv:2308.11596).  The speech frontend (mel + conv feature extractor)
+is a STUB per the brief: the encoder consumes precomputed frame
+embeddings (B, frames, d_model) supplied by ``input_specs``.
+
+Encoder: bidirectional self-attention layers (scanned).
+Decoder: causal self-attn + cross-attn + MLP (scanned).
+Serve: cross-attention K/V precomputed at prefill; decode is one-token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models.layers import (Params, constrain, cross_entropy_chunked,
+                                 embed_specs, fsdp_axis, init_embed,
+                                 init_mlp, mlp, mlp_specs, residual_spec,
+                                 rmsnorm)
+from repro.models.transformer import logits_from_hidden
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+    d = cfg.d_model
+    enc = {
+        "attn": A.init_attention(k2, d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, Le, stack=(Le,)),
+        "mlp": init_mlp(k3, d, cfg.d_ff, cfg.act, Le, stack=(Le,)),
+        "norm1": jnp.zeros((Le, d)),
+        "norm2": jnp.zeros((Le, d)),
+    }
+    kx, ky = jax.random.split(k4)
+    dec = {
+        "self_attn": A.init_attention(kx, d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.head_dim, Ld, stack=(Ld,)),
+        "cross_attn": A.init_attention(ky, d, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim, Ld, stack=(Ld,)),
+        "mlp": init_mlp(k5, d, cfg.d_ff, cfg.act, Ld, stack=(Ld,)),
+        "norm1": jnp.zeros((Ld, d)),
+        "norm2": jnp.zeros((Ld, d)),
+        "norm3": jnp.zeros((Ld, d)),
+    }
+    return {
+        "embed": init_embed(k1, cfg.padded_vocab, d, cfg.tie_embeddings),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": jnp.zeros((d,)),
+        "final_norm": jnp.zeros((d,)),
+    }
+
+
+def param_specs(cfg: ModelConfig, multi_pod: bool = False) -> Params:
+    f = fsdp_axis(multi_pod)
+    enc = {"attn": A.attention_specs(f, lead=(None,)),
+           "mlp": mlp_specs(cfg.act, f, lead=(None,)),
+           "norm1": P(None, None), "norm2": P(None, None)}
+    dec = {"self_attn": A.attention_specs(f, lead=(None,)),
+           "cross_attn": A.attention_specs(f, lead=(None,)),
+           "mlp": mlp_specs(cfg.act, f, lead=(None,)),
+           "norm1": P(None, None), "norm2": P(None, None),
+           "norm3": P(None, None)}
+    return {"embed": embed_specs(cfg.tie_embeddings, f),
+            "encoder": enc, "decoder": dec,
+            "enc_norm": P(None), "final_norm": P(None)}
+
+
+def _cross_attend(pa: Params, h, enc_k, enc_v, cfg: ModelConfig,
+                  chunk=1024):
+    """h: (B,Sq,d); enc_k/enc_v: (B,Se,Hkv,hd) precomputed."""
+    B, Sq, _ = h.shape
+    q = (h @ pa["w_q"].astype(h.dtype)).reshape(B, Sq, cfg.n_heads,
+                                                cfg.head_dim)
+    o = A.chunked_attention(q, enc_k.astype(h.dtype),
+                            enc_v.astype(h.dtype), causal=False,
+                            chunk=chunk)
+    o = o.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
+    return o @ pa["w_o"].astype(h.dtype)
+
+
+def _enc_kv(pa: Params, enc_out, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ pa["w_k"].astype(enc_out.dtype)) \
+        .reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ pa["w_v"].astype(enc_out.dtype)) \
+        .reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def encode(params: Params, cfg: ModelConfig, src_emb, *, batch_spec,
+           remat=True, attn_chunk=1024, seq_shard=True):
+    res_spec = (residual_spec(batch_spec, src_emb.shape[1]) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(src_emb, res_spec)
+
+    def body(x, pl):
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        a, _ = A.attn_forward(pl["attn"], h, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads,
+                              head_dim=cfg.head_dim,
+                              rope_theta=cfg.rope_theta, causal=False,
+                              chunk=attn_chunk)
+        x = x + a
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = constrain(x + mlp(pl["mlp"], h, cfg.act), res_spec)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    x = constrain(x, P(batch_spec, None, None))
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_trunk(params: Params, cfg: ModelConfig, tokens, enc_out, *,
+                 batch_spec, dtype, remat=True, attn_chunk=1024,
+                 seq_shard=True):
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    res_spec = (residual_spec(batch_spec, x.shape[1]) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(x, res_spec)
+
+    def body(x, pl):
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        a, _ = A.attn_forward(pl["self_attn"], h, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads,
+                              head_dim=cfg.head_dim,
+                              rope_theta=cfg.rope_theta, causal=True,
+                              chunk=attn_chunk)
+        x = x + a
+        h = rmsnorm(x, pl["norm3"], cfg.norm_eps)
+        ek, ev = _enc_kv(pl["cross_attn"], enc_out, cfg)
+        x = x + _cross_attend(pl["cross_attn"], h, ek, ev, cfg,
+                              chunk=attn_chunk)
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = constrain(x + mlp(pl["mlp"], h, cfg.act), res_spec)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = constrain(x, P(batch_spec, None, None))
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg, batch, *, z_loss=0.0, dtype=jnp.bfloat16,
+            remat=True, multi_pod=False, **_):
+    """batch: src_emb (B,Se,d) frontend stub output, tokens (B,St),
+    labels (B,St)."""
+    batch_spec = fsdp_axis(multi_pod)
+    enc_out = encode(params, cfg, batch["src_emb"].astype(dtype),
+                     batch_spec=batch_spec, remat=remat)
+    h = decode_trunk(params, cfg, batch["tokens"], enc_out,
+                     batch_spec=batch_spec, dtype=dtype, remat=remat)
+    mask = batch.get("mask", jnp.ones(batch["labels"].shape, jnp.float32))
+    loss, z_sq = cross_entropy_chunked(
+        h, params["embed"], batch["labels"], mask, cfg.vocab_size,
+        z_loss=z_loss,
+        logits_spec=P(fsdp_axis(multi_pod), None, "model"))
+    return loss, {"ce_loss": loss, "z_sq": z_sq, "loss": loss}
+
+
+def forward_hidden(params, cfg, tokens, *, prefix_emb=None,
+                   dtype=jnp.bfloat16, remat=True, multi_pod=False, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    assert prefix_emb is not None, "encdec needs src embeddings"
+    enc_out = encode(params, cfg, prefix_emb.astype(dtype),
+                     batch_spec=batch_spec, remat=remat)
+    h = decode_trunk(params, cfg, tokens, enc_out, batch_spec=batch_spec,
+                     dtype=dtype, remat=remat)
+    return h, {}
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    Se = cfg.frontend_tokens
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "ek": jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.head_dim),
+                        dtype),
+        "ev": jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.head_dim),
+                        dtype),
+    }
+
+
+def prefill(params, cfg, tokens, *, prefix_emb=None, cache_len_cap: int,
+            dtype=jnp.bfloat16, multi_pod=False, attn_chunk=1024, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    assert prefix_emb is not None
+    enc_out = encode(params, cfg, prefix_emb.astype(dtype),
+                     batch_spec=batch_spec, remat=False,
+                     attn_chunk=attn_chunk)
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    B, S, _ = x.shape
+    res_spec = residual_spec(batch_spec, S)
+    x = constrain(x, res_spec)
+
+    def body(x, pl):
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        a, (k, v) = A.attn_forward(pl["self_attn"], h, n_heads=cfg.n_heads,
+                                   n_kv_heads=cfg.n_kv_heads,
+                                   head_dim=cfg.head_dim,
+                                   rope_theta=cfg.rope_theta, causal=True,
+                                   chunk=attn_chunk)
+        x = x + a
+        h = rmsnorm(x, pl["norm3"], cfg.norm_eps)
+        ek, ev = _enc_kv(pl["cross_attn"], enc_out, cfg)
+        x = x + _cross_attend(pl["cross_attn"], h, ek, ev, cfg,
+                              chunk=attn_chunk)
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = constrain(x + mlp(pl["mlp"], h, cfg.act), res_spec)
+        pad = cache_len_cap - S
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, {"k": kp.astype(dtype), "v": vp.astype(dtype),
+                   "ek": ek.astype(dtype), "ev": ev.astype(dtype)}
+
+    x, cache = jax.lax.scan(body, x, params["decoder"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x[:, -1:]), cache, \
+        jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params, cfg, cache, cache_len, token, *,
+                dtype=jnp.bfloat16, multi_pod=False, attn_chunk=4096, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    x = params["embed"]["tok"].astype(dtype)[token]
+    x = constrain(x, P(batch_spec, None, None))
+
+    def body(x, xs):
+        pl, cl = xs
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        a, new_kv = A.decode_attn(pl["self_attn"], h,
+                                  {"k": cl["k"], "v": cl["v"]}, cache_len,
+                                  n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads,
+                                  head_dim=cfg.head_dim,
+                                  rope_theta=cfg.rope_theta,
+                                  chunk=attn_chunk)
+        x = x + a
+        h = rmsnorm(x, pl["norm3"], cfg.norm_eps)
+        x = x + _cross_attend(pl["cross_attn"], h, cl["ek"], cl["ev"], cfg)
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = x + mlp(pl["mlp"], h, cfg.act)
+        return x, {**new_kv, "ek": cl["ek"], "ev": cl["ev"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_cache, cache_len + 1

@@ -1,0 +1,362 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) in JAX.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split
+into chunks of Q tokens; within a chunk the recurrence is computed as a
+masked quadratic form (MXU-friendly batched matmuls), across chunks a
+small carried state (H, P, N) is scanned.  Decode is the O(1) recurrent
+step.  The pure-jnp reference recurrence lives in kernels/ref.py; the
+Pallas kernel tiles (chunk × head) blocks into VMEM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import (Params, constrain, cross_entropy_chunked,
+                                 dense_init, embed_specs, fsdp_axis,
+                                 init_embed, residual_spec, rmsnorm,
+                                 trunc_normal)
+from repro.models.transformer import logits_from_hidden
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    di = s.d_inner(cfg.d_model)
+    H = s.n_ssm_heads(cfg.d_model)
+    return s, di, H, s.head_dim, s.d_state
+
+
+def init_mixer(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Params:
+    s, di, H, Pdim, N = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    out_std = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(1e-1), H))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))        # inverse softplus
+    return {
+        "w_z": dense_init(ks[0], d, di, std=0.02, stack=stack),
+        "w_x": dense_init(ks[1], d, di, std=0.02, stack=stack),
+        "w_B": dense_init(ks[2], d, N, std=0.02, stack=stack),
+        "w_C": dense_init(ks[3], d, N, std=0.02, stack=stack),
+        "w_dt": dense_init(ks[4], d, H, std=0.02, stack=stack),
+        "dt_bias": jnp.broadcast_to(dt_bias, (*stack, H)),
+        "A_log": jnp.broadcast_to(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+                                  (*stack, H)),
+        "D": jnp.ones((*stack, H)),
+        "conv_w": trunc_normal(ks[5], (*stack, s.d_conv, di + 2 * N),
+                               std=0.2),
+        "conv_b": jnp.zeros((*stack, di + 2 * N)),
+        "norm": jnp.zeros((*stack, di)),
+        "w_out": dense_init(ks[6], di, d, std=out_std, stack=stack),
+    }
+
+
+def mixer_specs(fsdp, lead: Tuple = ()) -> Params:
+    return {
+        "w_z": P(*lead, fsdp, "model"),
+        "w_x": P(*lead, fsdp, "model"),
+        "w_B": P(*lead, fsdp, None),
+        "w_C": P(*lead, fsdp, None),
+        "w_dt": P(*lead, fsdp, None),
+        "dt_bias": P(*lead, None),
+        "A_log": P(*lead, None),
+        "D": P(*lead, None),
+        "conv_w": P(*lead, None, "model"),
+        "conv_b": P(*lead, "model"),
+        "norm": P(*lead, "model"),
+        "w_out": P(*lead, "model", fsdp),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": init_embed(k1, cfg.padded_vocab, cfg.d_model,
+                            cfg.tie_embeddings),
+        "layers": {
+            "mixer": init_mixer(k2, cfg, stack=(cfg.n_layers,)),
+            "norm": jnp.zeros((cfg.n_layers, cfg.d_model)),
+        },
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def param_specs(cfg: ModelConfig, multi_pod: bool = False) -> Params:
+    f = fsdp_axis(multi_pod)
+    return {
+        "embed": embed_specs(cfg.tie_embeddings, f),
+        "layers": {"mixer": mixer_specs(f, lead=(None,)),
+                   "norm": P(None, None)},
+        "final_norm": P(None),
+    }
+
+
+# --------------------------------------------------------------------- #
+# conv helper
+# --------------------------------------------------------------------- #
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    return out + b.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# chunked SSD scan
+# --------------------------------------------------------------------- #
+
+def ssd_chunked(xh, dt, A, Bm, Cm, D, *, chunk: int, h0=None):
+    """Chunked SSD.
+
+    xh: (B,S,H,P) values; dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N) (single group shared across heads); D: (H,).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:  # pad with dt=0 steps: a=1 (state carried), zero contribution
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xh32 = xh.astype(jnp.float32)
+    l = dt.astype(jnp.float32) * A                       # (B,S,H) log-decay
+    xc = xh32.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    lc = l.reshape(Bsz, nc, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(lc, axis=2)                          # (B,nc,Q,H)
+    T = cum[:, :, -1]                                     # (B,nc,H)
+
+    # intra-chunk quadratic part
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)            # (B,nc,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H) i,j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    M = CB[..., None] * decay * dtc[:, :, None, :, :]     # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk-final states: S_c = sum_j exp(T - cum_j) dt_j B_j ⊗ x_j
+    sdecay = jnp.exp(T[:, :, None] - cum) * dtc           # (B,nc,Q,H)
+    Sc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", sdecay, Bc, xc)
+
+    # scan across chunks
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+
+    def body(h, xs):
+        Sc_c, T_c = xs
+        h_prev = h
+        h = h * jnp.exp(T_c)[:, :, None, None] + Sc_c
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        body, h0, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(T, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_i · h_prev decayed by exp(cum_i)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cc, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    y = y + D[None, None, :, None] * xh.astype(jnp.float32)
+    y = y[:, :S_orig]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_step(h, x, dt, A, Bv, Cv, D):
+    """One recurrent step.  h: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bv, Cv: (B,N)."""
+    a = jnp.exp(dt.astype(jnp.float32) * A)              # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     Bv.astype(jnp.float32), x.astype(jnp.float32))
+    h = h * a[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv.astype(jnp.float32))
+    y = y + D[None, :, None] * x.astype(jnp.float32)
+    return h, y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# mixer forward
+# --------------------------------------------------------------------- #
+
+def mixer_forward(pm: Params, x, cfg: ModelConfig, *, use_kernel=False):
+    """x: (B,S,d) → (B,S,d)."""
+    s, di, H, Pd, N = _dims(cfg)
+    B_, S, _ = x.shape
+    z = x @ pm["w_z"].astype(x.dtype)
+    xin = x @ pm["w_x"].astype(x.dtype)
+    Bm = x @ pm["w_B"].astype(x.dtype)
+    Cm = x @ pm["w_C"].astype(x.dtype)
+    dt = jax.nn.softplus((x @ pm["w_dt"].astype(x.dtype))
+                         .astype(jnp.float32)
+                         + pm["dt_bias"].astype(jnp.float32))
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc, pm["conv_w"], pm["conv_b"]))
+    xin, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xh = xin.reshape(B_, S, H, Pd)
+    A = -jnp.exp(pm["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm,
+                       pm["D"].astype(jnp.float32), chunk=s.chunk_size)
+    y = y.reshape(B_, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), pm["norm"], cfg.norm_eps)
+    return y @ pm["w_out"].astype(x.dtype)
+
+
+def mixer_decode(pm: Params, x, state: Params, pos, cfg: ModelConfig):
+    """x: (B,1,d); state: {"h": (B,H,P,N), "conv": (B,K-1,di+2N)}."""
+    s, di, H, Pd, N = _dims(cfg)
+    B_ = x.shape[0]
+    xt = x[:, 0]
+    z = xt @ pm["w_z"].astype(x.dtype)
+    xin = xt @ pm["w_x"].astype(x.dtype)
+    Bm = xt @ pm["w_B"].astype(x.dtype)
+    Cm = xt @ pm["w_C"].astype(x.dtype)
+    dt = jax.nn.softplus((xt @ pm["w_dt"].astype(x.dtype))
+                         .astype(jnp.float32)
+                         + pm["dt_bias"].astype(jnp.float32))
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)         # (B, di+2N)
+    conv_buf = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    w = pm["conv_w"].astype(x.dtype)
+    out = jnp.einsum("bkc,kc->bc", conv_buf, w) + pm["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(out)
+    new_conv = conv_buf[:, 1:]
+    xin, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xh = xin.reshape(B_, H, Pd)
+    A = -jnp.exp(pm["A_log"].astype(jnp.float32))
+    h, y = ssd_step(state["h"], xh, dt, A, Bm, Cm,
+                    pm["D"].astype(jnp.float32))
+    y = y.reshape(B_, di)
+    y = rmsnorm(y * jax.nn.silu(z), pm["norm"], cfg.norm_eps)
+    out = (y @ pm["w_out"].astype(x.dtype))[:, None]
+    return out, {"h": h, "conv": new_conv}
+
+
+# --------------------------------------------------------------------- #
+# model-level API (mirrors transformer.py)
+# --------------------------------------------------------------------- #
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens, *,
+                   prefix_emb=None, dtype=jnp.bfloat16, remat=True,
+                   multi_pod=False, seq_shard=True, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    res_spec = (residual_spec(batch_spec, x.shape[1]) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(x, res_spec)
+
+    def body(x, pl):
+        h = rmsnorm(x, pl["norm"], cfg.norm_eps)
+        y = mixer_forward(pl["mixer"], h, cfg)
+        y = constrain(x + y, res_spec)
+        return y, {}
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), {}
+
+
+def loss_fn(params, cfg, batch, *, z_loss=0.0, dtype=jnp.bfloat16,
+            remat=True, multi_pod=False, **_):
+    h, _ = forward_hidden(params, cfg, batch["tokens"], dtype=dtype,
+                          remat=remat, multi_pod=multi_pod)
+    h = constrain(h, P(fsdp_axis(multi_pod), None, None))
+    mask = batch.get("mask", jnp.ones(batch["labels"].shape, jnp.float32))
+    loss, z_sq = cross_entropy_chunked(
+        h, params["embed"], batch["labels"], mask, cfg.vocab_size,
+        z_loss=z_loss,
+        logits_spec=P(fsdp_axis(multi_pod), None, "model"))
+    return loss, {"ce_loss": loss, "z_sq": z_sq, "loss": loss}
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_len: int = 0,
+                  dtype=jnp.bfloat16):
+    """SSM 'cache' = recurrent state; max_len is irrelevant (O(1))."""
+    return _state_struct(cfg, batch, dtype)
+
+
+def _state_struct(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s, di, H, Pd, N = _dims(cfg)
+    L = cfg.n_layers
+    return {
+        "h": jnp.zeros((L, batch, H, Pd, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, s.d_conv - 1, di + 2 * N), dtype),
+    }
+
+
+def prefill(params, cfg, tokens, *, cache_len_cap=None, dtype=jnp.bfloat16,
+            multi_pod=False, seq_shard=True, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    s, di, H, Pd, N = _dims(cfg)
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    B_, S, _ = x.shape
+    res_spec = (residual_spec(batch_spec, S) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(x, res_spec)
+
+    def body(x, pl):
+        pm = pl["mixer"]
+        h_in = rmsnorm(x, pl["norm"], cfg.norm_eps)
+        z = h_in @ pm["w_z"].astype(x.dtype)
+        xin = h_in @ pm["w_x"].astype(x.dtype)
+        Bm = h_in @ pm["w_B"].astype(x.dtype)
+        Cm = h_in @ pm["w_C"].astype(x.dtype)
+        dt = jax.nn.softplus((h_in @ pm["w_dt"].astype(x.dtype))
+                             .astype(jnp.float32)
+                             + pm["dt_bias"].astype(jnp.float32))
+        xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+        conv_tail = xbc[:, -(s.d_conv - 1):]
+        xbc = jax.nn.silu(causal_conv1d(xbc, pm["conv_w"], pm["conv_b"]))
+        xin, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+        xh = xin.reshape(B_, S, H, Pd)
+        A = -jnp.exp(pm["A_log"].astype(jnp.float32))
+        y, h_fin = ssd_chunked(xh, dt, A, Bm, Cm,
+                               pm["D"].astype(jnp.float32),
+                               chunk=s.chunk_size)
+        y = y.reshape(B_, S, di)
+        y = rmsnorm(y * jax.nn.silu(z), pm["norm"], cfg.norm_eps)
+        out = y @ pm["w_out"].astype(x.dtype)
+        return constrain(x + out, res_spec), \
+            {"h": h_fin, "conv": conv_tail.astype(dtype)}
+
+    x, state = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits, state, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params, cfg, cache, cache_len, token, *,
+                dtype=jnp.bfloat16, multi_pod=False, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    x = params["embed"]["tok"].astype(dtype)[token]
+    x = constrain(x, P(batch_spec, None, None))
+
+    def body(x, xs):
+        pl, st = xs
+        h = rmsnorm(x, pl["norm"], cfg.norm_eps)
+        y, new_st = mixer_decode(pl["mixer"], h, st, cache_len, cfg)
+        return x + y, new_st
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_cache, cache_len + 1

@@ -1,0 +1,141 @@
+"""Top-k mixture-of-experts FFN with capacity-based einsum dispatch.
+
+Experts are sharded over the 'model' mesh axis (16 experts → 1/chip on
+phi3.5; 32 → 2/chip on granite); the dispatch/combine einsums lower to
+all-to-alls under SPMD.  Aux losses: switch-style load balance + router
+z-loss.  Capacity is computed from the *per-group* token count so Seesaw
+batch ramps re-shape dispatch tensors consistently phase over phase.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P  # noqa: F401
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import constrain, dense_init, trunc_normal
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Params:
+    m = cfg.moe
+    assert m is not None
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    d, E, dff = cfg.d_model, m.num_experts, m.d_expert
+    out_std = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "router": trunc_normal(kr, (*stack, d, E), std=0.02),
+        "w_gate": dense_init(kg, d, dff, std=0.02, stack=(*stack, E)),
+        "w_up": dense_init(ku, d, dff, std=0.02, stack=(*stack, E)),
+        "w_down": dense_init(kd, dff, d, std=out_std, stack=(*stack, E)),
+    }
+
+
+def moe_specs(fsdp, lead: Tuple = ()) -> Params:
+    return {
+        "router": P(*lead, None, None),
+        "w_gate": P(*lead, "model", fsdp, None),
+        "w_up": P(*lead, "model", fsdp, None),
+        "w_down": P(*lead, "model", None, fsdp),
+    }
+
+
+def moe_forward(params: Params, x, cfg: ModelConfig, *,
+                group_size: int = 2048, batch_axes=None):
+    """x: (B, S, d) → (y, aux) where aux = {lb_loss, rz_loss, ...}.
+
+    Tokens are processed in groups of ``group_size`` (capacity is per
+    group), the standard TPU MoE formulation (GShard/Switch).
+
+    ``batch_axes``: mesh axes the token/group dim is sharded over.  The
+    (B,S,d)→(G,g,d) reshape defeats XLA's sharding propagation, which
+    then *replicates* the dispatch one-hots — observed as 6.6 GB of
+    all-gather per layer on granite-moe (EXPERIMENTS.md §Perf B1).  The
+    constraints below pin groups to the data axis and experts to the
+    model axis, so dispatch/combine lower to all-to-alls.
+    """
+    m = cfg.moe
+    assert m is not None
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    tokens = B * S
+    g = min(group_size, tokens)
+    n_groups = tokens // g
+    assert n_groups * g == tokens, (tokens, g)
+    cap = int(math.ceil(g * k * m.capacity_factor / E))
+    cap = min(max(cap, k), g)   # an expert can receive at most g tokens
+
+    xt = x.reshape(n_groups, g, d)
+    if batch_axes is not None:
+        xt = constrain(xt, P(batch_axes, None, None))
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # (G,g,E)
+
+    # --- top-k gating with per-expert position assignment ---------------
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)         # (G,g,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G,g,k,E)
+    # position of each (token, choice) within its expert's queue:
+    flat = onehot.reshape(n_groups, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                 # (G,g*k,E)
+    pos = pos.reshape(n_groups, g, k, E)
+    in_cap = (pos < cap) & (onehot > 0)
+    pos_cap = jnp.einsum("Gske,Gske->Gsk", pos, onehot).astype(jnp.int32)
+    keep = jnp.any(in_cap, axis=-1)                       # (G,g,k)
+
+    # dispatch: (G, g, E, C) one-hot combine weights
+    pos_onehot = jax.nn.one_hot(pos_cap, cap, dtype=jnp.float32)  # (G,g,k,C)
+    combine = jnp.einsum("Gsk,Gske,Gskc->Gsec",
+                         gate_vals * keep, onehot, pos_onehot)
+    combine = combine.astype(x.dtype)                     # bf16 on the wire
+    dispatch = (combine > 0).astype(x.dtype)              # (G,g,E,C)
+    if batch_axes is not None:
+        # shard the E dim over 'model': the expert contraction then
+        # keeps dispatch/combine local to each expert shard (partial-sum
+        # + all-reduce on the small (G,g,d) output) instead of
+        # all-gathering 5.4 GB of f32 one-hots per layer
+        combine = constrain(combine, P(batch_axes, None, "model", None))
+        dispatch = constrain(dispatch, P(batch_axes, None, "model", None))
+
+    # --- expert computation (all-to-all under expert sharding) ----------
+    ex_in = jnp.einsum("Gsec,Gsd->eGcd", dispatch, xt)    # (E,G,C,d)
+    if batch_axes is not None:
+        ex_in = constrain(ex_in, P("model", batch_axes, None, None))
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("eGcd,edf->eGcf", ex_in, wg)) \
+        * jnp.einsum("eGcd,edf->eGcf", ex_in, wu)
+    ex_out = jnp.einsum("eGcf,efd->eGcd", h, wd)          # (E,G,C,d)
+    if batch_axes is not None:
+        ex_out = constrain(ex_out, P("model", batch_axes, None, None))
+    y = jnp.einsum("Gsec,eGcd->Gsd", combine, ex_out)
+    if batch_axes is not None:
+        y = constrain(y, P(batch_axes, None, None))
+
+    # --- aux losses ------------------------------------------------------
+    # load balance (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=1)                          # (G,E)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(top1, axis=1)                           # (G,E)
+    lb_loss = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    rz = jax.nn.logsumexp(logits, axis=-1)
+    rz_loss = jnp.mean(jnp.square(rz))
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    aux = {"lb_loss": lb_loss, "rz_loss": rz_loss,
+           "frac_dropped": frac_dropped}
+    return y.reshape(B, S, d), aux
+
+
+def moe_aux_total(aux: Params, cfg: ModelConfig):
+    m = cfg.moe
+    assert m is not None
+    return (m.load_balance_loss * aux["lb_loss"]
+            + m.router_z_loss * aux["rz_loss"])

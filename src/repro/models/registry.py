@@ -1,0 +1,259 @@
+"""Family dispatch + workload input specs.
+
+``input_specs(cfg, shape)`` builds jax.ShapeDtypeStruct stand-ins (no
+allocation) for every model input of a workload — the dry-run lowers
+against these; ``concrete_inputs`` builds small real arrays for smoke
+tests.  ``input_shardings`` gives the matching PartitionSpec tree.
+
+Sharding choices (see DESIGN.md §4): batch over ('pod','data') when it
+divides, KV caches shard head_dim over 'model' (kv-head counts are ≤ 8;
+head_dim is always a multiple of 16) so the in-place sequence update
+stays local.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.layers import fsdp_axis
+
+Params = Dict[str, Any]
+
+_FAMILY_MODULE = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.transformer",
+    "vlm": "repro.models.transformer",
+    "ssm": "repro.models.mamba2",
+    "hybrid": "repro.models.rglru",
+    "encdec": "repro.models.encdec",
+    "audio": "repro.models.encdec",
+}
+
+
+def family(cfg: ModelConfig):
+    return importlib.import_module(_FAMILY_MODULE[cfg.arch_type])
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    return family(cfg).init_params(key, cfg)
+
+
+def param_specs(cfg: ModelConfig, multi_pod: bool = False,
+                serve_resident: bool = False) -> Params:
+    """serve_resident=True drops the FSDP ('data'/'pod') axis from every
+    weight spec — weights replicate over the data axis and stay sharded
+    over 'model' only, removing the per-step weight all-gather during
+    decode (a §Perf lever; costs N·2/16 bytes per device)."""
+    specs = family(cfg).param_specs(cfg, multi_pod)
+    if not serve_resident:
+        return specs
+
+    def strip(spec):
+        if not isinstance(spec, P):
+            return spec
+        cleaned = []
+        for ax in spec:
+            if ax in ("data", "pod"):
+                cleaned.append(None)
+            elif isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a not in ("data", "pod"))
+                cleaned.append(kept[0] if len(kept) == 1 else
+                               (kept or None))
+            else:
+                cleaned.append(ax)
+        return P(*cleaned)
+
+    return jax.tree.map(strip, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def loss_fn(params, cfg: ModelConfig, batch, **kw):
+    return family(cfg).loss_fn(params, cfg, batch, **kw)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, **kw):
+    return family(cfg).forward_hidden(params, cfg, tokens, **kw)
+
+
+def prefill(params, cfg: ModelConfig, tokens, **kw):
+    return family(cfg).prefill(params, cfg, tokens, **kw)
+
+
+def decode_step(params, cfg: ModelConfig, cache, cache_len, token, **kw):
+    return family(cfg).decode_step(params, cfg, cache, cache_len, token,
+                                   **kw)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return family(cfg)._cache_struct(cfg, batch, max_len, dtype)
+
+
+# --------------------------------------------------------------------- #
+# workload inputs
+# --------------------------------------------------------------------- #
+
+def _has_frontend(cfg: ModelConfig) -> bool:
+    return cfg.arch_type in ("vlm", "audio", "encdec")
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens after the frontend stub's share of the sequence."""
+    if _has_frontend(cfg):
+        return max(seq_len - cfg.frontend_tokens, 1)
+    return seq_len
+
+
+def train_batch_struct(cfg: ModelConfig, batch: int, seq_len: int):
+    st = text_len(cfg, seq_len)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, st), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, st), jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        out["prefix_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    elif cfg.arch_type in ("audio", "encdec"):
+        out["src_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    return out
+
+
+def prefill_struct(cfg: ModelConfig, batch: int, seq_len: int):
+    st = text_len(cfg, seq_len)
+    out = {"tokens": jax.ShapeDtypeStruct((batch, st), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        out["prefix_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    elif cfg.arch_type in ("audio", "encdec"):
+        out["prefix_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    return out
+
+
+def decode_struct(cfg: ModelConfig, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16):
+    # eval_shape: a 512-chip decode cache is hundreds of GB — it must
+    # never be allocated on the dry-run host
+    cache = jax.eval_shape(
+        lambda: cache_struct(cfg, batch, seq_len, dtype))
+    return {
+        "cache": cache,
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+        "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    if shape.mode == "train":
+        return train_batch_struct(cfg, shape.global_batch, shape.seq_len)
+    if shape.mode == "prefill":
+        return prefill_struct(cfg, shape.global_batch, shape.seq_len)
+    return decode_struct(cfg, shape.global_batch, shape.seq_len)
+
+
+# --------------------------------------------------------------------- #
+# input shardings
+# --------------------------------------------------------------------- #
+
+def _batch_axes(batch: int, multi_pod: bool):
+    need = 32 if multi_pod else 16
+    if batch % need == 0:
+        return fsdp_axis(multi_pod)
+    if batch % 16 == 0:
+        return "data"
+    return None
+
+
+def _cache_spec(leaf_shape: Tuple[int, ...], b_axes, leading_layer: bool,
+                seq_shard: bool = False):
+    """Shard batch dim; shard the last dim over 'model' when it is a
+    multiple of 16 (head_dim / feature shards).  seq_shard=True shards
+    the KV sequence dim over 'model' instead (flash-decode layout: the
+    per-shard partial softmax needs only an all-reduce of (B,H,1)
+    stats, no KV gather)."""
+    spec = [None] * len(leaf_shape)
+    bdim = 1 if leading_layer else 0
+    if len(leaf_shape) > bdim:
+        spec[bdim] = b_axes
+    sdim = bdim + 1
+    if (seq_shard and len(leaf_shape) >= sdim + 2
+            and leaf_shape[sdim] % 16 == 0):
+        spec[sdim] = "model"
+    elif leaf_shape[-1] % 16 == 0 and len(leaf_shape) >= 2:
+        spec[-1] = "model"
+    return P(*spec)
+
+
+def input_shardings(cfg: ModelConfig, shape: InputShape,
+                    multi_pod: bool = False,
+                    cache_seq_shard: bool = False):
+    b = _batch_axes(shape.global_batch, multi_pod)
+    if shape.mode in ("train", "prefill"):
+        struct = (train_batch_struct if shape.mode == "train"
+                  else prefill_struct)(cfg, shape.global_batch,
+                                       shape.seq_len)
+        out = {}
+        for k, v in struct.items():
+            out[k] = P(b, None, None) if v.ndim == 3 else P(b, None)
+        return out
+    # decode: cache leaves are layer-stacked for scanned families,
+    # python lists for the hybrid
+    struct = decode_struct(cfg, shape.global_batch, shape.seq_len)
+    layer_stacked = cfg.arch_type not in ("hybrid",)
+
+    def spec_of(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[-1] == 1 and leaf.ndim == 2:   # token (B,1)
+            return P(b, None)
+        lead = layer_stacked and leaf.ndim >= 3
+        # pos arrays: small ints, replicate
+        if leaf.dtype == jnp.int32:
+            return P(*([None] * leaf.ndim))
+        return _cache_spec(leaf.shape, b, lead,
+                           seq_shard=cache_seq_shard)
+
+    cache_spec = jax.tree.map(spec_of, struct["cache"])
+    return {"cache": cache_spec, "cache_len": P(),
+            "token": P(b, None)}
+
+
+# --------------------------------------------------------------------- #
+# concrete small inputs for smoke tests
+# --------------------------------------------------------------------- #
+
+def concrete_inputs(cfg: ModelConfig, mode: str, batch: int, seq_len: int,
+                    seed: int = 0):
+    rng = np.random.default_rng(seed)
+    st = text_len(cfg, seq_len)
+    toks = rng.integers(0, cfg.vocab_size, (batch, st)).astype(np.int32)
+    if mode == "train":
+        out = {"tokens": jnp.asarray(toks),
+               "labels": jnp.asarray(np.roll(toks, -1, axis=1))}
+        if cfg.arch_type == "vlm":
+            out["prefix_emb"] = jnp.asarray(
+                rng.normal(0, 1, (batch, cfg.frontend_tokens,
+                                  cfg.frontend_dim)), jnp.bfloat16)
+        elif cfg.arch_type in ("audio", "encdec"):
+            out["src_emb"] = jnp.asarray(
+                rng.normal(0, 1, (batch, cfg.frontend_tokens,
+                                  cfg.frontend_dim)), jnp.bfloat16)
+        return out
+    if mode == "prefill":
+        out = {"tokens": jnp.asarray(toks)}
+        if _has_frontend(cfg):
+            out["prefix_emb"] = jnp.asarray(
+                rng.normal(0, 1, (batch, cfg.frontend_tokens,
+                                  cfg.frontend_dim)), jnp.bfloat16)
+        return out
+    cache = cache_struct(cfg, batch, seq_len)
+    return {"cache": cache,
+            "cache_len": jnp.asarray(seq_len // 2, jnp.int32),
+            "token": jnp.asarray(toks[:, :1])}

@@ -1,0 +1,396 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks + local sliding-window attention in a 2:1 pattern, each followed
+by an MLP.
+
+Layer stacking: the repeating pattern (recurrent, recurrent, attention)
+is scanned as a "super-layer" triple; the remainder (38 = 12×3 + 2) is
+unrolled.  The RG-LRU linear recurrence uses ``lax.associative_scan``
+for training/prefill and an O(1) step for decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import HybridConfig, ModelConfig
+from repro.configs.base import _pattern as pattern_of
+from repro.models import attention as A
+from repro.models.layers import (Params, constrain, cross_entropy_chunked,
+                                 dense_init, embed_specs, fsdp_axis,
+                                 init_embed, init_mlp, mlp, mlp_specs,
+                                 residual_spec, rmsnorm, trunc_normal)
+from repro.models.mamba2 import causal_conv1d
+from repro.models.transformer import logits_from_hidden
+
+LRU_C = 8.0
+
+
+# --------------------------------------------------------------------- #
+# RG-LRU core
+# --------------------------------------------------------------------- #
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, b1 * a2 + b2
+
+
+def rglru_scan(y, r, i, lam, h0=None, chunk: int = 512):
+    """y, r, i: (B,S,W); lam: (W,) recurrence parameter.
+    h_t = a_t h_{t-1} + sqrt(1-a_t²)(i_t ⊙ y_t),  a_t = exp(-c·softplus(λ)·r_t)
+
+    Chunked: an associative scan *within* each chunk (parallel depth
+    log Q) and a sequential carry across chunks — bounds the live
+    intermediates to O(B·Q·W·log Q) instead of O(B·S·W·log S), which at
+    lru_width 4096 / seq 4k was >13 GB/device of f32 scan temporaries.
+    """
+    log_a = -LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i.astype(jnp.float32) * y.astype(jnp.float32))
+
+    B, S, W = gated.shape
+    Q = min(chunk, S)
+    if S % Q:
+        pad = Q - S % Q
+        # a=1, b=0 padding carries state unchanged and emits garbage we
+        # slice off
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gated = jnp.pad(gated, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + Q - 1) // Q
+    ac = jnp.moveaxis(a.reshape(B, nc, Q, W), 1, 0)
+    bc = jnp.moveaxis(gated.reshape(B, nc, Q, W), 1, 0)
+
+    h_init = (jnp.zeros((B, W), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def body(h_prev, xs):
+        a_c, b_c = xs                                  # (B,Q,W)
+        a_cum, b_loc = jax.lax.associative_scan(_combine, (a_c, b_c),
+                                                axis=1)
+        h_c = b_loc + a_cum * h_prev[:, None, :]
+        return h_c[:, -1], h_c
+
+    body = jax.checkpoint(body)
+    h_last, hs = jax.lax.scan(body, h_init, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, nc * Q, W)[:, :S]
+    return hs.astype(y.dtype), h_last
+
+
+def rglru_step(h, y, r, i, lam):
+    """One step: h, y, r, i: (B,W)."""
+    log_a = -LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    h = a * h.astype(jnp.float32) \
+        + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i.astype(jnp.float32) * y.astype(jnp.float32))
+    return h.astype(y.dtype), h
+
+
+# --------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------- #
+
+def init_recurrent(key, cfg: ModelConfig, stack=()) -> Params:
+    h = cfg.hybrid or HybridConfig()
+    w = h.lru_width or cfg.d_model
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    out_std = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "w_gate": dense_init(ks[0], d, w, std=0.02, stack=stack),
+        "w_x": dense_init(ks[1], d, w, std=0.02, stack=stack),
+        "conv_w": trunc_normal(ks[2], (*stack, h.conv1d_width, w), std=0.2),
+        "conv_b": jnp.zeros((*stack, w)),
+        "w_r": dense_init(ks[3], w, w, std=0.02, stack=stack),
+        "w_i": dense_init(ks[4], w, w, std=0.02, stack=stack),
+        "lam": jnp.broadcast_to(
+            jnp.log(jnp.expm1(jnp.linspace(0.1, 0.5, w))), (*stack, w)),
+        "w_out": dense_init(ks[5], w, d, std=out_std, stack=stack),
+    }
+
+
+def recurrent_specs(fsdp, lead=()) -> Params:
+    return {
+        "w_gate": P(*lead, fsdp, "model"),
+        "w_x": P(*lead, fsdp, "model"),
+        "conv_w": P(*lead, None, "model"),
+        "conv_b": P(*lead, "model"),
+        "w_r": P(*lead, fsdp, "model"),
+        "w_i": P(*lead, fsdp, "model"),
+        "lam": P(*lead, "model"),
+        "w_out": P(*lead, "model", fsdp),
+    }
+
+
+def recurrent_forward(pr: Params, x, cfg: ModelConfig, state=None):
+    """x: (B,S,d).  state: None or {"conv": (B,K-1,W), "h": (B,W)} for
+    streaming prefill continuation.  Returns (out, new_state)."""
+    h_cfg = cfg.hybrid or HybridConfig()
+    gate = jax.nn.gelu(x @ pr["w_gate"].astype(x.dtype))
+    y = x @ pr["w_x"].astype(x.dtype)
+    conv_tail = y[:, -(h_cfg.conv1d_width - 1):]
+    y = causal_conv1d(y, pr["conv_w"], pr["conv_b"])
+    r = jax.nn.sigmoid(y @ pr["w_r"].astype(x.dtype))
+    i = jax.nn.sigmoid(y @ pr["w_i"].astype(x.dtype))
+    h0 = state["h"] if state is not None else None
+    hs, h_last = rglru_scan(y, r, i, pr["lam"], h0=h0)
+    out = (gate * hs) @ pr["w_out"].astype(x.dtype)
+    new_state = {"conv": conv_tail, "h": h_last}
+    return out, new_state
+
+
+def recurrent_decode(pr: Params, x, state: Params, cfg: ModelConfig):
+    """x: (B,1,d); state: {"conv": (B,K-1,W), "h": (B,W)}."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ pr["w_gate"].astype(x.dtype))
+    y = xt @ pr["w_x"].astype(x.dtype)
+    buf = jnp.concatenate([state["conv"], y[:, None]], axis=1)
+    w = pr["conv_w"].astype(x.dtype)
+    y = jnp.einsum("bkc,kc->bc", buf, w) + pr["conv_b"].astype(x.dtype)
+    r = jax.nn.sigmoid(y @ pr["w_r"].astype(x.dtype))
+    i = jax.nn.sigmoid(y @ pr["w_i"].astype(x.dtype))
+    _, h = rglru_step(state["h"], y, r, i, pr["lam"])
+    out = ((gate * h.astype(x.dtype)) @ pr["w_out"].astype(x.dtype))[:, None]
+    return out, {"conv": buf[:, 1:], "h": h}
+
+
+def _temporal(kind: str, key, cfg: ModelConfig, stack=()):
+    if kind == "recurrent":
+        return init_recurrent(key, cfg, stack=stack)
+    return A.init_attention(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, cfg.n_layers, stack=stack)
+
+
+def init_layer(key, kind: str, cfg: ModelConfig, stack=()) -> Params:
+    kt, km = jax.random.split(key)
+    return {
+        "kind": kind,  # removed before use; informational
+        "temporal": _temporal(kind, kt, cfg, stack=stack),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.act, cfg.n_layers,
+                        stack=stack),
+        "norm1": jnp.zeros((*stack, cfg.d_model)),
+        "norm2": jnp.zeros((*stack, cfg.d_model)),
+    }
+
+
+# --------------------------------------------------------------------- #
+# hybrid stack: scanned pattern groups + unrolled remainder
+# --------------------------------------------------------------------- #
+
+def _groups(cfg: ModelConfig):
+    pat = (cfg.hybrid or HybridConfig()).pattern
+    L = cfg.n_layers
+    n_full = L // len(pat)
+    rem = list(pattern_of(cfg, L))[n_full * len(pat):]
+    return pat, n_full, rem
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    pat, n_full, rem = _groups(cfg)
+    keys = jax.random.split(key, 3 + len(rem))
+    p: Params = {
+        "embed": init_embed(keys[0], cfg.padded_vocab, cfg.d_model,
+                            cfg.tie_embeddings),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if n_full:
+        gk = jax.random.split(keys[1], len(pat))
+        p["groups"] = {
+            f"slot{j}": {k: v for k, v in
+                         init_layer(gk[j], pat[j], cfg,
+                                    stack=(n_full,)).items()
+                         if k != "kind"}
+            for j in range(len(pat))
+        }
+    for r, kind in enumerate(rem):
+        p[f"rem{r}"] = {k: v for k, v in
+                        init_layer(keys[3 + r], kind, cfg).items()
+                        if k != "kind"}
+    return p
+
+
+def _layer_specs(kind: str, cfg: ModelConfig, fsdp, lead=()):
+    t = (recurrent_specs(fsdp, lead) if kind == "recurrent"
+         else A.attention_specs(fsdp, lead))
+    return {"temporal": t,
+            "mlp": mlp_specs(cfg.act, fsdp, lead),
+            "norm1": P(*lead, None), "norm2": P(*lead, None)}
+
+
+def param_specs(cfg: ModelConfig, multi_pod: bool = False) -> Params:
+    f = fsdp_axis(multi_pod)
+    pat, n_full, rem = _groups(cfg)
+    p: Params = {
+        "embed": embed_specs(cfg.tie_embeddings, f),
+        "final_norm": P(None),
+    }
+    if n_full:
+        p["groups"] = {f"slot{j}": _layer_specs(pat[j], cfg, f, lead=(None,))
+                       for j in range(len(pat))}
+    for r, kind in enumerate(rem):
+        p[f"rem{r}"] = _layer_specs(kind, cfg, f)
+    return p
+
+
+def _apply_layer(pl: Params, x, kind: str, cfg: ModelConfig, *, res_spec,
+                 attn_chunk=1024):
+    h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+    if kind == "recurrent":
+        t, _ = recurrent_forward(pl["temporal"], h, cfg)
+    else:
+        w = (cfg.hybrid or HybridConfig()).local_window
+        t, _ = A.attn_forward(pl["temporal"], h, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads,
+                              head_dim=cfg.head_dim,
+                              rope_theta=cfg.rope_theta, causal=True,
+                              window=w, chunk=attn_chunk)
+    x = constrain(x + t, res_spec)
+    h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+    x = constrain(x + mlp(pl["mlp"], h, cfg.act), res_spec)
+    return x
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens, *,
+                   prefix_emb=None, dtype=jnp.bfloat16, remat=True,
+                   multi_pod=False, attn_chunk=1024, seq_shard=True, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    pat, n_full, rem = _groups(cfg)
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    res_spec = (residual_spec(batch_spec, x.shape[1]) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(x, res_spec)
+
+    if n_full:
+        def body(x, pg):
+            for j, kind in enumerate(pat):
+                fn = lambda x, pl, kind=kind: _apply_layer(
+                    pl, x, kind, cfg, res_spec=res_spec,
+                    attn_chunk=attn_chunk)
+                if remat:
+                    # nested per-layer remat: the group backward then
+                    # recomputes one layer at a time, so the live
+                    # working set is a single layer's interior, not the
+                    # whole (rec, rec, attn) triple's
+                    fn = jax.checkpoint(fn)
+                x = fn(x, pg[f"slot{j}"])
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    for r, kind in enumerate(rem):
+        fn = lambda x, pl=params[f"rem{r}"], kind=kind: _apply_layer(
+            pl, x, kind, cfg, res_spec=res_spec, attn_chunk=attn_chunk)
+        x = jax.checkpoint(fn)(x) if remat else fn(x)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), {}
+
+
+def loss_fn(params, cfg, batch, *, z_loss=0.0, dtype=jnp.bfloat16,
+            remat=True, multi_pod=False, **_):
+    h, _ = forward_hidden(params, cfg, batch["tokens"], dtype=dtype,
+                          remat=remat, multi_pod=multi_pod)
+    h = constrain(h, P(fsdp_axis(multi_pod), None, None))
+    mask = batch.get("mask", jnp.ones(batch["labels"].shape, jnp.float32))
+    loss, z_sq = cross_entropy_chunked(
+        h, params["embed"], batch["labels"], mask, cfg.vocab_size,
+        z_loss=z_loss,
+        logits_spec=P(fsdp_axis(multi_pod), None, "model"))
+    return loss, {"ce_loss": loss, "z_sq": z_sq, "loss": loss}
+
+
+# --------------------------------------------------------------------- #
+# serving: per-layer heterogeneous caches (python-structured, since the
+# layer list is static)
+# --------------------------------------------------------------------- #
+
+def _iter_layers(params: Params, cfg: ModelConfig):
+    """Yield (kind, params_one_layer) in network order (unstacks groups)."""
+    pat, n_full, rem = _groups(cfg)
+    for g in range(n_full):
+        for j, kind in enumerate(pat):
+            pl = jax.tree.map(lambda a: a[g], params["groups"][f"slot{j}"])
+            yield kind, pl
+    for r, kind in enumerate(rem):
+        yield kind, params[f"rem{r}"]
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    h = cfg.hybrid or HybridConfig()
+    w = h.lru_width or cfg.d_model
+    caches = []
+    for kind in pattern_of(cfg, cfg.n_layers):
+        if kind == "recurrent":
+            caches.append({
+                "conv": jnp.zeros((batch, h.conv1d_width - 1, w), dtype),
+                "h": jnp.zeros((batch, w), jnp.float32),
+            })
+        else:
+            W = min(h.local_window, max_len)
+            caches.append(A.init_ring_cache(batch, W, cfg.n_kv_heads,
+                                            cfg.head_dim, dtype))
+    return caches
+
+
+def prefill(params, cfg, tokens, *, cache_len_cap: int, dtype=jnp.bfloat16,
+            multi_pod=False, attn_chunk=1024, seq_shard=True, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    h_cfg = cfg.hybrid or HybridConfig()
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    B_, S, _ = x.shape
+    res_spec = (residual_spec(batch_spec, S) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(x, res_spec)
+    caches = []
+    for kind, pl in _iter_layers(params, cfg):
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        if kind == "recurrent":
+            t, st = recurrent_forward(pl["temporal"], h, cfg)
+            caches.append({"conv": st["conv"].astype(dtype), "h": st["h"]})
+        else:
+            W = min(h_cfg.local_window, cache_len_cap)
+            t, (k, v) = A.attn_forward(
+                pl["temporal"], h, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, causal=True,
+                window=h_cfg.local_window, chunk=attn_chunk)
+            caches.append(A.ring_from_prefill(k, v, S, W, dtype=dtype))
+        x = x + t
+        hh = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = constrain(x + mlp(pl["mlp"], hh, cfg.act), res_spec)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x[:, -1:]), caches, \
+        jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params, cfg, cache, cache_len, token, *, dtype=jnp.bfloat16,
+                multi_pod=False, **_):
+    batch_spec = fsdp_axis(multi_pod)
+    h_cfg = cfg.hybrid or HybridConfig()
+    x = params["embed"]["tok"].astype(dtype)[token]
+    x = constrain(x, P(batch_spec, None, None))
+    new_caches = []
+    for (kind, pl), cl in zip(_iter_layers(params, cfg), cache):
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        if kind == "recurrent":
+            t, st = recurrent_decode(pl["temporal"], h, cl, cfg)
+        else:
+            t, st = A.decode_attn(pl["temporal"], h, cl, cache_len,
+                                  n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads,
+                                  head_dim=cfg.head_dim,
+                                  rope_theta=cfg.rope_theta,
+                                  window=h_cfg.local_window)
+        new_caches.append(st)
+        x = x + t
+        hh = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        x = x + mlp(pl["mlp"], hh, cfg.act)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_caches, cache_len + 1

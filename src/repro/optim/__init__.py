@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adam, adamw, init_opt_state, nsgd,
+                                    sgd, update)
+
+__all__ = ["adam", "adamw", "init_opt_state", "nsgd", "sgd", "update"]

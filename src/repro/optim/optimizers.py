@@ -1,0 +1,132 @@
+"""Optimizers from scratch (no optax): SGD, normalized SGD (the paper's
+Adam proxy, eq. 4), Adam, AdamW.  Functional optax-like triples:
+``init(params) → state``, ``update(grads, state, params, lr) →
+(updates, state)``; all states are pytrees that shard like the params.
+
+NSGD implements  θ ← θ − η g/√(E‖g‖²)  with E‖g‖² estimated by the
+global gradient norm of the batch (the batch-size dependence σ²Tr(H)/B
+that powers Corollary 1 enters through this denominator).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Params]
+    update: Callable[..., Tuple[Params, Params]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads, jnp.asarray(1.0)
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(momentum: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params),
+                    "count": jnp.zeros((), jnp.int32)}
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], grads)
+            params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+            return params, {"mu": mu, "count": state["count"] + 1}
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def nsgd(grad_clip: float = 0.0, eps: float = 1e-12) -> Optimizer:
+    """Normalized SGD: θ ← θ − η g/‖g‖ (global normalization — the
+    scalar-preconditioner Adam proxy of paper eq. 4)."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        norm = _global_norm(grads)
+        scale = lr / jnp.maximum(norm, eps)
+        params = jax.tree.map(lambda p, g: p - scale * g, params, grads)
+        return params, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(beta1: float = 0.9, beta2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        c = state["count"] + 1
+        bc1 = 1.0 - beta1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - beta2 ** c.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: beta1 * m + (1 - beta1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: beta2 * v + (1 - beta2) * g * g,
+                         state["v"], grads)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            step = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step = step + weight_decay * p
+            return p - lr * step
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def adam(beta1=0.9, beta2=0.95, eps=1e-8, grad_clip=1.0) -> Optimizer:
+    return adamw(beta1, beta2, eps, 0.0, grad_clip)
+
+
+def from_config(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.kind == "adamw":
+        return adamw(cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay,
+                     cfg.grad_clip)
+    if cfg.kind == "adam":
+        return adam(cfg.beta1, cfg.beta2, cfg.eps, cfg.grad_clip)
+    if cfg.kind == "sgd":
+        return sgd(0.0, cfg.grad_clip)
+    if cfg.kind == "nsgd":
+        return nsgd(cfg.grad_clip)
+    raise ValueError(cfg.kind)
+
+
+def init_opt_state(optimizer: Optimizer, params):
+    return optimizer.init(params)
+
+
+def update(optimizer: Optimizer, grads, state, params, lr):
+    return optimizer.update(grads, state, params, lr)

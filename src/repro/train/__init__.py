@@ -1,0 +1,4 @@
+from repro.train.trainer import Trainer, TrainState, make_train_step
+from repro.train import checkpoint
+
+__all__ = ["Trainer", "TrainState", "make_train_step", "checkpoint"]

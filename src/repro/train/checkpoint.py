@@ -1,0 +1,67 @@
+"""Checkpointing: params/opt-state/step/tokens to a single .npz with
+path-flattened keys — dependency-free, works for any pytree of arrays.
+Seesaw phase boundaries are the natural checkpoint points (the batch
+size of the resumed phase is recovered from the plan + tokens_seen)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}[{i}]/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        vals = [_unflatten_into(v, flat, f"{prefix}[{i}]/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    arr = flat[prefix.rstrip("/")]
+    return jax.numpy.asarray(arr, dtype=template.dtype)
+
+
+def _base(path: str) -> str:
+    return path[:-4] if path.endswith(".npz") else path
+
+
+def save(path: str, params, opt_state, step: int, tokens_seen: float,
+         extra: Dict[str, Any] | None = None):
+    base = _base(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    flat = {}
+    flat.update({f"p:{k}": v for k, v in _flatten(params).items()})
+    flat.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(base + ".npz", **flat)
+    meta = {"step": step, "tokens_seen": tokens_seen, **(extra or {})}
+    with open(base + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, params_template, opt_template
+            ) -> Tuple[Any, Any, Dict[str, Any]]:
+    base = _base(path)
+    data = np.load(base + ".npz")
+    flat_p = {k[2:]: data[k] for k in data.files if k.startswith("p:")}
+    flat_o = {k[2:]: data[k] for k in data.files if k.startswith("o:")}
+    params = _unflatten_into(params_template, flat_p)
+    opt = _unflatten_into(opt_template, flat_o)
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    return params, opt, meta

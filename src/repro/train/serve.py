@@ -1,0 +1,55 @@
+"""Batched serving runtime: prefill + greedy/temperature decode loop over
+the KV-cache step functions, with a per-(batch, prompt-len) compiled
+cache mirroring the trainer's per-batch-size cache."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as R
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 4096,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.dtype = dtype
+        self._prefill = jax.jit(partial(
+            R.prefill, cfg=cfg, cache_len_cap=max_len, dtype=dtype),
+            static_argnames=())
+        self._decode = jax.jit(partial(
+            R.decode_step, cfg=cfg, dtype=dtype))
+
+    def generate(self, tokens: np.ndarray, n_new: int, *,
+                 prefix_emb=None, temperature: float = 0.0,
+                 seed: int = 0) -> np.ndarray:
+        """tokens: (B, S) prompt.  Returns (B, n_new) generated ids."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        logits, cache, ln = self._prefill(
+            params=self.params, tokens=tokens, prefix_emb=prefix_emb)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, temperature, key)
+        out.append(tok)
+        for i in range(n_new - 1):
+            key, sub = jax.random.split(key)
+            logits, cache, ln = self._decode(
+                params=self.params, cache=cache, cache_len=ln, token=tok)
+            tok = self._sample(logits, temperature, sub)
+            out.append(tok)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        last = logits[:, -1]
+        if temperature <= 0.0:
+            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, last / temperature)[:, None].astype(jnp.int32)

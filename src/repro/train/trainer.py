@@ -1,0 +1,166 @@
+"""The Seesaw training runtime.
+
+The batch ramp is a first-class feature: the trainer walks the plan's
+phases, keeps a compiled train-step per distinct global batch size
+(shape change ⇒ one retrace, then cached), carries params/optimizer
+state across the boundary untouched, and keeps the LR curve token-
+indexed so cosine (continuous) and seesaw/step (piecewise) schedulers
+share one code path.
+
+Gradient accumulation: if a phase's global batch exceeds
+``max_device_batch``, the step scans microbatches and averages grads —
+the ramp then changes accumulation count, not the jitted shape.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.core import schedules as S
+from repro.core.seesaw import SeesawPlan, build_plan
+from repro.models import registry as R
+from repro.optim import optimizers as O
+
+Params = Any
+
+
+@dataclass
+class TrainState:
+    params: Params
+    opt_state: Params
+    step: int = 0
+    tokens_seen: float = 0.0
+
+
+def make_train_step(cfg: RunConfig, optimizer: O.Optimizer, *,
+                    multi_pod: bool = False,
+                    micro_batches: int = 1) -> Callable:
+    """Returns step(params, opt_state, batch, lr) → (params, opt_state,
+    metrics).  jit-able; batch shapes decide the compile cache key."""
+    mcfg = cfg.model
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def loss_of(params, batch):
+        return R.loss_fn(params, mcfg, batch, z_loss=cfg.z_loss,
+                         dtype=dtype, remat=cfg.remat,
+                         multi_pod=multi_pod)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def step(params, opt_state, batch, lr):
+        if micro_batches > 1:
+            def split(x):
+                b = x.shape[0] // micro_batches
+                return x.reshape(micro_batches, b, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            gacc = jax.tree.map(jnp.zeros_like, params)
+            loss_acc = 0.0
+            aux = None
+            for i in range(micro_batches):
+                mb = jax.tree.map(lambda x, i=i: x[i], micro)
+                (l, aux), g = grad_fn(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                loss_acc = loss_acc + l
+            grads = jax.tree.map(lambda g: g / micro_batches, gacc)
+            loss = loss_acc / micro_batches
+            metrics = dict(aux)
+            metrics["loss"] = loss
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                               lr)
+        metrics = {k: jnp.asarray(v, jnp.float32)
+                   for k, v in metrics.items()}
+        metrics["grad_norm"] = O._global_norm(grads)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(self, cfg: RunConfig, *, mesh=None, multi_pod: bool = False,
+                 max_device_batch: Optional[int] = None, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.multi_pod = multi_pod
+        self.max_device_batch = max_device_batch
+        total = cfg.resolved_total_tokens()
+        sch = cfg.schedule
+        self.plan = build_plan(
+            kind=sch.kind, base_lr=sch.base_lr, total_tokens=total,
+            warmup_frac=sch.warmup_frac, b0=cfg.global_batch_size,
+            alpha=sch.alpha,
+            beta=(sch.beta if sch.kind in ("seesaw-general", "naive-ramp")
+                  else None),
+            n_cuts=sch.n_cuts, max_batch_size=sch.max_batch_size)
+        self.optimizer = O.from_config(cfg.optimizer)
+        self._cosine = S.quarter_cosine_lr(sch.base_lr, total,
+                                           sch.warmup_frac * total)
+        self._step_cache: Dict[Tuple, Callable] = {}
+        key = jax.random.PRNGKey(cfg.seed + seed)
+        params = R.init_params(key, cfg.model)
+        opt_state = self.optimizer.init(params)
+        self.state = TrainState(params, opt_state)
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------ #
+    def lr_at(self, tokens: float) -> float:
+        if self.cfg.schedule.kind == "cosine":
+            return float(self._cosine(tokens))
+        return self.plan.lr_at(tokens)
+
+    def _compiled_step(self, batch_size: int, micro: int) -> Callable:
+        key = (batch_size, micro)
+        if key not in self._step_cache:
+            fn = make_train_step(self.cfg, self.optimizer,
+                                 multi_pod=self.multi_pod,
+                                 micro_batches=micro)
+            self._step_cache[key] = jax.jit(fn, donate_argnums=(0, 1))
+        return self._step_cache[key]
+
+    def _micro(self, batch_size: int) -> int:
+        if not self.max_device_batch:
+            return 1
+        n_dev = 1 if self.mesh is None else int(np.prod(
+            [self.mesh.shape[a] for a in ("pod", "data")
+             if a in self.mesh.shape])) or 1
+        per_dev = batch_size // max(n_dev, 1)
+        micro = -(-per_dev // self.max_device_batch)
+        while batch_size % micro:
+            micro += 1
+        return micro
+
+    def run(self, loader, max_steps: Optional[int] = None,
+            log_cb: Optional[Callable] = None) -> List[Dict[str, float]]:
+        st = self.state
+        t0 = time.time()
+        for phase, pstep, batch in loader:
+            if max_steps is not None and st.step >= max_steps:
+                break
+            lr = self.lr_at(st.tokens_seen)
+            micro = self._micro(phase.batch_size)
+            fn = self._compiled_step(phase.batch_size, micro)
+            params, opt_state, metrics = fn(
+                st.params, st.opt_state, batch, jnp.asarray(lr, jnp.float32))
+            st.params, st.opt_state = params, opt_state
+            tok = phase.batch_size * self.cfg.seq_len
+            st.tokens_seen += tok
+            st.step += 1
+            rec = {"step": st.step, "tokens": st.tokens_seen, "lr": lr,
+                   "batch_size": phase.batch_size, "phase": phase.index,
+                   "loss": float(metrics["loss"]),
+                   "wall": time.time() - t0}
+            for k, v in metrics.items():
+                if k != "loss":
+                    rec[k] = float(v)
+            self.history.append(rec)
+            if log_cb and (st.step % self.cfg.log_every == 0):
+                log_cb(rec)
+        return self.history

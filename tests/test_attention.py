@@ -1,0 +1,122 @@
+"""Chunked-attention (the XLA/distributed path) correctness: causal,
+windows, GQA, block-skip, ring caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.models import attention as A
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _qkv(B, H, Hkv, S, hd):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    return q, k, v
+
+
+def _ref(q, k, v, causal=True, window=None):
+    """Oracle in (B,S,H,hd) layout with optional sliding window."""
+    qq = q.transpose(0, 2, 1, 3)
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    B, H, S, hd = qq.shape
+    Hkv = kk.shape[1]
+    G = H // Hkv
+    kk = jnp.repeat(kk, G, axis=1)
+    vv = jnp.repeat(vv, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qq, kk) / np.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+    return o.transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 1024])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_ref(chunk, causal):
+    q, k, v = _qkv(2, 4, 2, 96, 32)
+    out = A.chunked_attention(q, k, v, causal=causal, chunk=chunk)
+    want = _ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, 32, 1000])
+def test_sliding_window(window):
+    q, k, v = _qkv(1, 2, 1, 64, 16)
+    out = A.chunked_attention(q, k, v, causal=True, window=window,
+                              chunk=16)
+    want = _ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_block_skip_matches_baseline():
+    q, k, v = _qkv(1, 2, 2, 128, 16)
+    base = A.chunked_attention(q, k, v, causal=True, chunk=32)
+    skip = A.chunked_attention(q, k, v, causal=True, chunk=32,
+                               block_skip=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(skip),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ring_cache_decode_matches_full():
+    """Ring-cache decode (windowed) ≡ full-cache decode with window mask,
+    across a run of steps that wraps the ring."""
+    B, H, Hkv, hd, W = 1, 2, 1, 16, 8
+    params = A.init_attention(jax.random.PRNGKey(0), 32, H, Hkv, hd, 2)
+    S0 = 12
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, S0 + 6, 32),
+                           jnp.float32)
+    # full-forward oracle with window
+    out_full, _ = A.attn_forward(params, xs, n_heads=H, n_kv_heads=Hkv,
+                                 head_dim=hd, rope_theta=10.0,
+                                 causal=True, window=W, chunk=8)
+    # prefill S0 then decode 6 with the ring cache
+    h_pre = xs[:, :S0]
+    _, (k, v) = A.attn_forward(params, h_pre, n_heads=H, n_kv_heads=Hkv,
+                               head_dim=hd, rope_theta=10.0, causal=True,
+                               window=W, chunk=8)
+    cache = A.ring_from_prefill(k, v, S0, W, dtype=jnp.float32)
+    for t in range(6):
+        o, cache = A.decode_attn(params, xs[:, S0 + t:S0 + t + 1], cache,
+                                 jnp.asarray(S0 + t), n_heads=H,
+                                 n_kv_heads=Hkv, head_dim=hd,
+                                 rope_theta=10.0, window=W)
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(out_full[:, S0 + t:S0 + t + 1]),
+            atol=1e-4, rtol=1e-4)
+
+
+def test_full_cache_decode_matches_forward():
+    B, H, Hkv, hd = 2, 4, 2, 16
+    params = A.init_attention(jax.random.PRNGKey(0), 32, H, Hkv, hd, 2)
+    S = 20
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, S + 1, 32))
+    out_full, _ = A.attn_forward(params, xs, n_heads=H, n_kv_heads=Hkv,
+                                 head_dim=hd, rope_theta=100.0,
+                                 causal=True, chunk=8)
+    _, (k, v) = A.attn_forward(params, xs[:, :S], n_heads=H,
+                               n_kv_heads=Hkv, head_dim=hd,
+                               rope_theta=100.0, causal=True, chunk=8)
+    pad = 8
+    cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+             "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    o, _ = A.decode_attn(params, xs[:, S:S + 1], cache, jnp.asarray(S),
+                         n_heads=H, n_kv_heads=Hkv, head_dim=hd,
+                         rope_theta=100.0)
+    np.testing.assert_allclose(np.asarray(o),
+                               np.asarray(out_full[:, S:S + 1]),
+                               atol=1e-4, rtol=1e-4)

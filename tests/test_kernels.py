@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose vs the ref.py oracles
+(Pallas executed with interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd import ssd_full
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,Hkv,S,hd", [
+        (2, 4, 2, 256, 64),     # GQA
+        (1, 8, 8, 128, 128),    # MHA, MXU-square blocks
+        (2, 4, 1, 512, 32),     # MQA
+        (1, 2, 2, 384, 64),     # non-pow2 sequence
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_oracle(self, B, H, Hkv, S, hd, causal):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hkv, S, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hkv, S, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 4, 256, 64)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, 2, 256, 64)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, 2, 256, 64)).astype(dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    def test_block_shape_independence(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 512, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+        o1 = flash_attention(q, k, v, block_q=128, block_k=128,
+                             interpret=True)
+        o2 = flash_attention(q, k, v, block_q=64, block_k=256,
+                             interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 128), (2, 33, 256), (512,),
+                                       (3, 5, 7, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, dtype):
+        x = jax.random.normal(KEY, shape).astype(dtype)
+        s = (jax.random.normal(jax.random.PRNGKey(1), (shape[-1],))
+             * 0.1).astype(dtype)
+        out = rmsnorm(x, s, interpret=True)
+        want = ref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    def test_row_blocking_boundary(self):
+        x = jax.random.normal(KEY, (130, 64))   # not a block multiple
+        s = jnp.zeros((64,))
+        out = rmsnorm(x, s, block_rows=64, interpret=True)
+        want = ref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-6)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("B,S,H,P,N,Q", [
+        (2, 96, 4, 32, 16, 32),
+        (1, 128, 2, 64, 32, 64),
+        (2, 100, 3, 16, 8, 32),   # padding path
+    ])
+    def test_matches_naive_recurrence(self, B, S, H, P, N, Q):
+        ks = jax.random.split(KEY, 5)
+        xh = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (B, S, N))
+        Cm = jax.random.normal(ks[4], (B, S, N))
+        D = jnp.ones((H,)) * 0.5
+        y, h = ssd_full(xh, dt, A, Bm, Cm, D, chunk=Q, interpret=True)
+        yr, hr = ref.ssd_ref(xh, dt, A, Bm, Cm, D)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_model_path_matches_kernel(self):
+        """models.mamba2.ssd_chunked (XLA path) ≡ kernels.ssd (Pallas)."""
+        from repro.models.mamba2 import ssd_chunked
+        ks = jax.random.split(KEY, 5)
+        B, S, H, P, N = 2, 64, 2, 16, 8
+        xh = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (B, S, N))
+        Cm = jax.random.normal(ks[4], (B, S, N))
+        D = jnp.zeros((H,))
+        y1, h1 = ssd_chunked(xh, dt, A, Bm, Cm, D, chunk=16)
+        y2, h2 = ssd_full(xh, dt, A, Bm, Cm, D, chunk=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   atol=1e-4, rtol=1e-4)

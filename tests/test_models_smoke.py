@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned family — one forward/train step on CPU, asserting output shapes
+and no NaNs — plus prefill→decode consistency with the full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import registry as R
+from repro.models.transformer import logits_from_hidden
+from repro.optim import optimizers as O
+
+REDUCED = {name: get_config(name).reduced() for name in ASSIGNED_ARCHS}
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_reduced_config_limits(name):
+    cfg = REDUCED[name]
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_forward_and_train_step(name):
+    cfg = REDUCED[name]
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    batch = R.concrete_inputs(cfg, "train", 2, 64)
+
+    def loss_of(p):
+        return R.loss_fn(p, cfg, batch, remat=True)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_of, has_aux=True)(params)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), name
+    # one optimizer step moves params and keeps them finite
+    opt = O.adamw()
+    st = opt.init(params)
+    new_params, _ = opt.update(grads, st, params, 1e-3)
+    leaves = jax.tree.leaves(new_params)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params), leaves))
+    assert moved
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_loss_near_uniform_at_init(name):
+    cfg = REDUCED[name]
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    batch = R.concrete_inputs(cfg, "train", 2, 64)
+    loss, _ = R.loss_fn(params, cfg, batch, remat=False)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_prefill_decode_matches_forward(name):
+    cfg = REDUCED[name]
+    if cfg.arch_type == "moe":   # exactness needs no-drop capacity
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = R.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    S = 33
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    (2, S + 1)).astype(np.int32))
+    prefix = None
+    if cfg.arch_type in ("vlm", "audio", "encdec"):
+        prefix = jnp.asarray(rng.normal(0, 1, (2, cfg.frontend_tokens,
+                                               cfg.frontend_dim)),
+                             jnp.float32)
+    h, _ = R.forward_hidden(params, cfg, toks, prefix_emb=prefix,
+                            remat=False, dtype=jnp.float32)
+    want = logits_from_hidden(params, cfg, h[:, -1:])
+    _, cache, ln = R.prefill(params, cfg, toks[:, :S], prefix_emb=prefix,
+                             cache_len_cap=128, dtype=jnp.float32)
+    got, _, _ = R.decode_step(params, cfg, cache, ln, toks[:, S:S + 1],
+                              dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("name", ["llama3.2-3b", "mamba2-2.7b",
+                                  "recurrentgemma-9b"])
+def test_multi_step_decode_finite(name):
+    cfg = REDUCED[name]
+    params = R.init_params(jax.random.PRNGKey(2), cfg)
+    d = R.concrete_inputs(cfg, "prefill", 2, 16)
+    logits, cache, ln = R.prefill(params, cfg, d["tokens"],
+                                  prefix_emb=d.get("prefix_emb"),
+                                  cache_len_cap=64)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        logits, cache, ln = R.decode_step(params, cfg, cache, ln, tok)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    assert int(ln) == 16 + 4 + (cfg.frontend_tokens
+                                if cfg.arch_type in ("audio", "encdec")
+                                else 0) - (cfg.frontend_tokens
+                                           if cfg.arch_type in
+                                           ("audio", "encdec") else 0)
+
+
+def test_param_specs_cover_params():
+    """Every param leaf has a PartitionSpec of matching rank."""
+    from jax.sharding import PartitionSpec
+    for name in ASSIGNED_ARCHS:
+        cfg = REDUCED[name]
+        params = R.init_params(jax.random.PRNGKey(0), cfg)
+        specs = R.param_specs(cfg)
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        assert len(flat_p) == len(flat_s), name
+        pdef = jax.tree.structure(params)
+        sdef = jax.tree.structure(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        assert pdef == sdef, name

@@ -1,0 +1,80 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe as M
+
+CFG = get_config("granite-moe-1b-a400m").reduced()
+
+
+def _x(B=2, S=64, d=None):
+    d = d or CFG.d_model
+    return jax.random.normal(jax.random.PRNGKey(0), (B, S, d),
+                             jnp.float32)
+
+
+def test_output_shape_and_finite():
+    params = M.init_moe(jax.random.PRNGKey(1), CFG)
+    y, aux = M.moe_forward(params, _x(), CFG)
+    assert y.shape == (2, 64, CFG.d_model)
+    assert bool(jnp.isfinite(y).all())
+    assert 0.0 <= float(aux["frac_dropped"]) < 1.0
+
+
+def test_no_drop_at_high_capacity():
+    cfg = dataclasses.replace(
+        CFG, moe=dataclasses.replace(CFG.moe, capacity_factor=16.0))
+    params = M.init_moe(jax.random.PRNGKey(1), cfg)
+    _, aux = M.moe_forward(params, _x(), cfg)
+    assert float(aux["frac_dropped"]) == 0.0
+
+
+def test_load_balance_loss_lower_bound():
+    """Switch LB loss ≥ 1 (equality at perfect balance)."""
+    params = M.init_moe(jax.random.PRNGKey(1), CFG)
+    _, aux = M.moe_forward(params, _x(B=4, S=128), CFG)
+    assert float(aux["lb_loss"]) >= 0.99
+
+
+def test_capacity_drops_increase_when_squeezed():
+    tight = dataclasses.replace(
+        CFG, moe=dataclasses.replace(CFG.moe, capacity_factor=0.25))
+    params = M.init_moe(jax.random.PRNGKey(1), tight)
+    _, aux = M.moe_forward(params, _x(), tight)
+    assert float(aux["frac_dropped"]) > 0.0
+
+
+def test_group_size_invariance_when_no_drops():
+    cfg = dataclasses.replace(
+        CFG, moe=dataclasses.replace(CFG.moe, capacity_factor=32.0))
+    params = M.init_moe(jax.random.PRNGKey(1), cfg)
+    x = _x(B=2, S=64)
+    y1, _ = M.moe_forward(params, x, cfg, group_size=32)
+    y2, _ = M.moe_forward(params, x, cfg, group_size=128)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gates_renormalized():
+    """Top-k gate weights are renormalized: scaling router logits by a
+    constant shifts nothing."""
+    params = M.init_moe(jax.random.PRNGKey(1), CFG)
+    y1, _ = M.moe_forward(params, _x(), CFG)
+    assert bool(jnp.isfinite(y1).all())
+
+
+def test_gradients_flow_to_experts_and_router():
+    params = M.init_moe(jax.random.PRNGKey(1), CFG)
+    x = _x()
+
+    def loss(p):
+        y, aux = M.moe_forward(p, x, CFG)
+        return jnp.mean(jnp.square(y)) + 0.01 * aux["lb_loss"]
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0
+    assert float(jnp.max(jnp.abs(g["w_up"]))) > 0

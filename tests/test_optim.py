@@ -1,0 +1,116 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as O
+
+
+def _params():
+    return {"w": jnp.asarray([1.0, -2.0, 3.0]),
+            "b": jnp.asarray([[0.5, 0.5]])}
+
+
+def _grads():
+    return {"w": jnp.asarray([0.1, 0.2, -0.3]),
+            "b": jnp.asarray([[1.0, -1.0]])}
+
+
+class TestSGD:
+    def test_step(self):
+        opt = O.sgd()
+        p, g = _params(), _grads()
+        st = opt.init(p)
+        p2, st = opt.update(g, st, p, 0.5)
+        np.testing.assert_allclose(p2["w"], p["w"] - 0.5 * g["w"])
+
+    def test_momentum(self):
+        opt = O.sgd(momentum=0.9)
+        p, g = _params(), _grads()
+        st = opt.init(p)
+        p1, st = opt.update(g, st, p, 1.0)
+        p2, st = opt.update(g, st, p1, 1.0)
+        # second step applies (1+0.9)·g
+        np.testing.assert_allclose(
+            np.asarray(p2["w"]), np.asarray(p["w"] - g["w"] - 1.9 * g["w"]),
+            rtol=1e-6)
+
+
+class TestNSGD:
+    def test_unit_norm_update(self):
+        """θ ← θ − η g/‖g‖: the applied update has global norm η."""
+        opt = O.nsgd()
+        p, g = _params(), _grads()
+        st = opt.init(p)
+        p2, _ = opt.update(g, st, p, 0.25)
+        delta = jax.tree.map(lambda a, b: a - b, p, p2)
+        norm = float(O._global_norm(delta))
+        assert norm == pytest.approx(0.25, rel=1e-5)
+
+    def test_scale_invariance(self):
+        """NSGD is invariant to gradient scaling — the Adam-proxy
+        property the paper's analysis rests on."""
+        opt = O.nsgd()
+        p, g = _params(), _grads()
+        g10 = jax.tree.map(lambda x: 10.0 * x, g)
+        st = opt.init(p)
+        p1, _ = opt.update(g, st, p, 0.1)
+        p2, _ = opt.update(g10, st, p, 0.1)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+
+class TestAdamW:
+    def test_first_step_is_signish(self):
+        """After bias correction, step 1 ≈ lr·sign(g) for eps→0."""
+        opt = O.adamw(beta1=0.9, beta2=0.95, eps=1e-12, grad_clip=0.0)
+        p, g = _params(), _grads()
+        st = opt.init(p)
+        p2, _ = opt.update(g, st, p, 1e-3)
+        step = np.asarray(p["w"] - p2["w"])
+        np.testing.assert_allclose(step, 1e-3 * np.sign(g["w"]), rtol=1e-4)
+
+    def test_weight_decay_decoupled(self):
+        opt_wd = O.adamw(weight_decay=0.1, grad_clip=0.0)
+        opt_no = O.adamw(weight_decay=0.0, grad_clip=0.0)
+        p, g = _params(), _grads()
+        p_wd, _ = opt_wd.update(g, opt_wd.init(p), p, 1e-2)
+        p_no, _ = opt_no.update(g, opt_no.init(p), p, 1e-2)
+        diff = np.asarray(p_no["w"] - p_wd["w"])
+        np.testing.assert_allclose(diff, 1e-2 * 0.1 * np.asarray(p["w"]),
+                                   rtol=1e-3)
+
+    def test_grad_clip(self):
+        opt = O.adamw(grad_clip=0.1)
+        p = _params()
+        huge = jax.tree.map(lambda x: 1e6 * jnp.ones_like(x), p)
+        p2, _ = opt.update(huge, opt.init(p), p, 1e-3)
+        assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(p2))
+
+    def test_matches_manual_two_steps(self):
+        b1, b2, eps, lr = 0.9, 0.95, 1e-8, 3e-3
+        opt = O.adamw(b1, b2, eps, 0.0, grad_clip=0.0)
+        p = {"w": jnp.asarray([1.0])}
+        g1 = {"w": jnp.asarray([0.4])}
+        g2 = {"w": jnp.asarray([-0.2])}
+        st = opt.init(p)
+        p1, st = opt.update(g1, st, p, lr)
+        p2, st = opt.update(g2, st, p1, lr)
+        # manual
+        m = 0.1 * 0.4
+        v = 0.05 * 0.16
+        w = 1.0 - lr * (m / 0.1) / (np.sqrt(v / 0.05) + eps)
+        m = b1 * m + 0.1 * (-0.2)
+        v = b2 * v + 0.05 * 0.04
+        w = w - lr * (m / (1 - b1 ** 2)) / (np.sqrt(v / (1 - b2 ** 2)) + eps)
+        assert float(p2["w"][0]) == pytest.approx(w, rel=1e-6)
+
+
+def test_from_config_dispatch():
+    from repro.configs import OptimizerConfig
+    for kind in ("adamw", "adam", "sgd", "nsgd"):
+        opt = O.from_config(OptimizerConfig(kind=kind))
+        p = _params()
+        p2, _ = opt.update(_grads(), opt.init(p), p, 1e-3)
+        assert jax.tree.structure(p2) == jax.tree.structure(p)

@@ -1,0 +1,111 @@
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedules as S
+from repro.core import seesaw as SS
+
+
+class TestCosine:
+    def test_warmup_then_decay(self):
+        lr = S.cosine_lr(1.0, 1000.0, 100.0)
+        assert float(lr(0.0)) == 0.0
+        assert float(lr(50.0)) == pytest.approx(0.5)
+        assert float(lr(100.0)) == pytest.approx(1.0, abs=1e-6)
+        assert float(lr(1000.0)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_quarter_cosine_lemma1_form(self):
+        lr = S.quarter_cosine_lr(2.0, 1000.0, 0.0)
+        assert float(lr(0.0)) == pytest.approx(2.0)
+        assert float(lr(500.0)) == pytest.approx(2.0 * math.cos(math.pi / 4),
+                                                 rel=1e-5)
+        assert float(lr(1000.0)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_cut_points_match_curve(self):
+        total, warm, alpha = 10_000.0, 1_000.0, 2.0
+        cuts = S.cosine_cut_points(total, warm, alpha, 3, quarter=True)
+        lr = S.quarter_cosine_lr(1.0, total, warm)
+        for k, c in enumerate(cuts, start=1):
+            assert float(lr(c)) == pytest.approx(alpha ** (-k), rel=1e-4)
+
+    def test_cut_points_monotone(self):
+        cuts = S.cosine_cut_points(1e6, 1e5, 1.1, 12)
+        assert all(a < b for a, b in zip(cuts, cuts[1:]))
+
+
+class TestStepDecay:
+    def test_matches_alpha_powers(self):
+        lr = S.step_decay_lr(1.0, [100.0, 200.0], 2.0, 10.0)
+        assert float(lr(50.0)) == pytest.approx(1.0)
+        assert float(lr(150.0)) == pytest.approx(0.5)
+        assert float(lr(250.0)) == pytest.approx(0.25)
+
+    def test_warmup(self):
+        lr = S.step_decay_lr(1.0, [100.0], 2.0, 10.0)
+        assert float(lr(5.0)) == pytest.approx(0.5)
+
+
+class TestPlan:
+    def test_seesaw_keeps_product(self):
+        """Algorithm 1: step-decay cuts α; seesaw cuts √α and ramps ×α —
+        the Corollary-1 invariant α·√β is identical."""
+        ref = SS.build_plan(kind="step", base_lr=1.0, total_tokens=1e6,
+                            warmup_frac=0.1, b0=32, alpha=2.0, n_cuts=5)
+        see = SS.build_plan(kind="seesaw", base_lr=1.0, total_tokens=1e6,
+                            warmup_frac=0.1, b0=32, alpha=2.0, n_cuts=5)
+        assert ref.alpha * math.sqrt(ref.beta) == pytest.approx(
+            see.alpha * math.sqrt(see.beta))
+
+    def test_seesaw_batches_double(self):
+        p = SS.build_plan(kind="seesaw", base_lr=1.0, total_tokens=1e6,
+                          warmup_frac=0.1, b0=32, alpha=2.0, n_cuts=4)
+        assert p.batch_sizes() == [32, 64, 128, 256, 512]
+        scales = [ph.lr_scale for ph in p.phases]
+        for a, b in zip(scales, scales[1:]):
+            assert b / a == pytest.approx(1 / math.sqrt(2))
+
+    def test_divergent_plan_rejected(self):
+        """Lemma 4: α < √β must raise."""
+        with pytest.raises(ValueError):
+            SS.build_plan(kind="seesaw-general", base_lr=1.0,
+                          total_tokens=1e6, warmup_frac=0.1, b0=32,
+                          alpha=1.0, beta=4.0, n_cuts=4)
+
+    def test_max_batch_cap(self):
+        p = SS.build_plan(kind="seesaw", base_lr=1.0, total_tokens=1e6,
+                          warmup_frac=0.1, b0=32, alpha=2.0, n_cuts=6,
+                          max_batch_size=128)
+        assert max(p.batch_sizes()) == 128
+
+    def test_token_conservation(self):
+        for kind in ("cosine", "step", "seesaw"):
+            p = SS.build_plan(kind=kind, base_lr=1.0, total_tokens=2 ** 24,
+                              warmup_frac=0.1, b0=16, alpha=2.0, n_cuts=5)
+            seq = 256
+            sched = p.total_tokens_scheduled(seq)
+            # conserved to within half of one final-phase step
+            slack = p.phases[-1].batch_size * seq / 2 + 1
+            assert abs(sched - 2 ** 24) <= slack, kind
+
+
+class TestLemma1:
+    def test_theoretical_value(self):
+        assert SS.theoretical_speedup() == pytest.approx(1 - 2 / math.pi)
+
+    def test_discrete_plan_approaches_continuous(self):
+        """Finer step-decay approximations converge to the 2/π limit."""
+        fr_coarse = SS.continuous_step_fraction(4, 2.0)
+        fr_fine = SS.continuous_step_fraction(60, 1.05)
+        assert abs(fr_fine - 2 / math.pi) < abs(fr_coarse - 2 / math.pi)
+        assert fr_fine == pytest.approx(2 / math.pi, abs=0.02)
+
+    def test_measured_speedup_on_plans(self):
+        see = SS.build_plan(kind="seesaw", base_lr=1.0, total_tokens=2 ** 28,
+                            warmup_frac=0.1, b0=32, alpha=1.1, n_cuts=40)
+        ref = SS.build_plan(kind="cosine", base_lr=1.0, total_tokens=2 ** 28,
+                            warmup_frac=0.1, b0=32, alpha=1.1, n_cuts=40)
+        sp = SS.measured_speedup(see, ref, seq_len=1024)
+        # α=1.1 with deep cuts ≈ paper's setting: ≈30–36% fewer steps
+        assert 0.25 < sp < 0.40

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the scheduling system's
+invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import seesaw as SS
+from repro.core import theory as T
+
+TOTALS = st.integers(min_value=2 ** 20, max_value=2 ** 30)
+B0S = st.sampled_from([8, 16, 32, 64, 128, 256])
+ALPHAS = st.sampled_from([1.1, 1.5, 2.0, 4.0])
+NCUTS = st.integers(min_value=1, max_value=12)
+KINDS = st.sampled_from(["seesaw", "step", "cosine", "constant"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(total=TOTALS, b0=B0S, alpha=ALPHAS, n_cuts=NCUTS, kind=KINDS)
+def test_plan_invariants(total, b0, alpha, n_cuts, kind):
+    p = SS.build_plan(kind=kind, base_lr=1.0, total_tokens=float(total),
+                      warmup_frac=0.1, b0=b0, alpha=alpha, n_cuts=n_cuts)
+    # phases tile [0, total]
+    assert p.phases[0].start_tokens == 0.0
+    assert p.phases[-1].end_tokens == pytest.approx(float(total))
+    for a, b in zip(p.phases, p.phases[1:]):
+        assert a.end_tokens == pytest.approx(b.start_tokens)
+    # batch never shrinks, LR scale never grows
+    for a, b in zip(p.phases, p.phases[1:]):
+        assert b.batch_size >= a.batch_size
+        assert b.lr_scale <= a.lr_scale + 1e-12
+    # seesaw never violates Lemma 4
+    if kind == "seesaw":
+        assert p.alpha >= math.sqrt(p.beta) - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(total=TOTALS, b0=B0S, alpha=ALPHAS, n_cuts=NCUTS,
+       seq=st.sampled_from([128, 512, 1024, 4096]))
+def test_token_conservation_under_ramp(total, b0, alpha, n_cuts, seq):
+    """Seesaw consumes the same token budget as the reference, to within
+    half a final-phase step (the discretization floor)."""
+    see = SS.build_plan(kind="seesaw", base_lr=1.0,
+                        total_tokens=float(total), warmup_frac=0.1,
+                        b0=b0, alpha=alpha, n_cuts=n_cuts)
+    sched = see.total_tokens_scheduled(seq)
+    slack = see.phases[-1].batch_size * seq / 2 + 1
+    assert abs(sched - total) <= slack
+
+
+@settings(max_examples=40, deadline=None)
+@given(total=TOTALS, b0=B0S, alpha=ALPHAS, n_cuts=NCUTS)
+def test_seesaw_always_fewer_serial_steps(total, b0, alpha, n_cuts):
+    see = SS.build_plan(kind="seesaw", base_lr=1.0,
+                        total_tokens=float(total), warmup_frac=0.1,
+                        b0=b0, alpha=alpha, n_cuts=n_cuts)
+    ref = SS.build_plan(kind="step", base_lr=1.0,
+                        total_tokens=float(total), warmup_frac=0.1,
+                        b0=b0, alpha=alpha, n_cuts=n_cuts)
+    assert see.total_steps(1024) <= ref.total_steps(1024)
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(min_value=1.01, max_value=4.0),
+       beta=st.floats(min_value=1.0, max_value=16.0))
+def test_divergence_guard_matches_lemma4(alpha, beta):
+    risky = SS.divergence_risk(alpha, beta)
+    assert risky == (alpha < math.sqrt(beta) - 1e-12)
+    if risky:
+        with pytest.raises(ValueError):
+            SS.build_plan(kind="seesaw-general", base_lr=1.0,
+                          total_tokens=1e6, warmup_frac=0.1, b0=8,
+                          alpha=alpha, beta=beta, n_cuts=3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(min_value=10, max_value=60),
+       a=st.floats(min_value=0.5, max_value=2.0),
+       steps=st.integers(min_value=50, max_value=500))
+def test_sgd_risk_monotone_envelope(d, a, steps):
+    """Risk under a stable constant schedule never explodes and ends
+    below its start (bias burn-down dominates at these step counts)."""
+    lam = T.power_law_spectrum(d, a=a)
+    eta = T.stability_eta(lam)
+    risks, _, m = T.run_schedule(lam, 1.0, [T.TheoryPhase(eta, 8, steps)])
+    start = 0.5 * float(np.dot(lam, np.full(d, 1.0 / d)))
+    assert np.isfinite(risks[-1])
+    assert risks[-1] < start * 1.01
+
+
+@settings(max_examples=20, deadline=None)
+@given(b0=B0S, alpha=st.sampled_from([1.5, 2.0, 3.0]),
+       k=st.integers(min_value=1, max_value=6))
+def test_effective_lr_invariant_on_seesaw_line(b0, alpha, k):
+    """On the Seesaw line (cut √α, ramp ×α) the NSGD effective LR decays
+    exactly like the reference α-step-decay: (√β/α_s)ᵏ = α^{-k/2}·...
+    i.e. matches η̃ ∝ η√B."""
+    a_s, b_s = math.sqrt(alpha), alpha
+    eff = SS.effective_lr_ratio(a_s, b_s, k)
+    assert eff == pytest.approx(1.0)   # most aggressive non-divergent ramp

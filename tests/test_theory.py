@@ -1,0 +1,145 @@
+"""Numerical verification of the paper's Section 5 results using the
+exact bias/variance recursions (no sampling noise)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import theory as T
+
+LAM = T.power_law_spectrum(80, a=1.0)
+SIGMA2 = 1.0
+ETA0 = T.stability_eta(LAM)
+B0 = 8
+SAMPLES = [4096] * 6
+
+
+@pytest.fixture(scope="module")
+def warm_m():
+    return T.warm_start(LAM, SIGMA2, ETA0, B0, 2000)
+
+
+class TestTheorem1:
+    def test_equivalence_matched_products(self, warm_m):
+        """α₁β₁ = α₂β₂ ⇒ risks within a constant factor (we see ≈1)."""
+        r = T.theorem1_risk_ratio(LAM, SIGMA2, eta0=ETA0, b0=B0,
+                                  alpha1=4.0, beta1=1.0, alpha2=2.0,
+                                  beta2=2.0, samples_per_phase=SAMPLES,
+                                  m_start=warm_m)
+        assert 0.5 < r < 2.0
+
+    def test_equivalence_three_way(self, warm_m):
+        """(8,1), (4,2), (2,4) all share αβ=8."""
+        r1 = T.theorem1_risk_ratio(LAM, SIGMA2, eta0=ETA0, b0=B0,
+                                   alpha1=8.0, beta1=1.0, alpha2=4.0,
+                                   beta2=2.0, samples_per_phase=SAMPLES,
+                                   m_start=warm_m)
+        r2 = T.theorem1_risk_ratio(LAM, SIGMA2, eta0=ETA0, b0=B0,
+                                   alpha1=8.0, beta1=1.0, alpha2=2.0,
+                                   beta2=4.0, samples_per_phase=SAMPLES,
+                                   m_start=warm_m)
+        assert 0.5 < r1 < 2.0 and 0.5 < r2 < 2.0
+
+    def test_mismatched_products_diverge_in_risk(self, warm_m):
+        """αβ mismatched ⇒ ratio drifts from 1 with more phases."""
+        short = T.theorem1_risk_ratio(LAM, SIGMA2, eta0=ETA0, b0=B0,
+                                      alpha1=4.0, beta1=1.0, alpha2=1.2,
+                                      beta2=1.0,
+                                      samples_per_phase=[4096] * 2,
+                                      m_start=warm_m)
+        long = T.theorem1_risk_ratio(LAM, SIGMA2, eta0=ETA0, b0=B0,
+                                     alpha1=4.0, beta1=1.0, alpha2=1.2,
+                                     beta2=1.0,
+                                     samples_per_phase=[4096] * 8,
+                                     m_start=warm_m)
+        assert abs(math.log(long)) > abs(math.log(short))
+
+
+class TestCorollary1:
+    def test_nsgd_equivalence_matched_alpha_sqrt_beta(self, warm_m):
+        """Corollary 1: α√β matched ⇒ equivalent NSGD risk.
+        (2,1) vs (√2,2): 2·1 = √2·√2."""
+        eta_n = ETA0 * math.sqrt(SIGMA2 * np.sum(LAM) / B0)
+        r = T.corollary1_risk_ratio(LAM, SIGMA2, eta0=eta_n, b0=B0,
+                                    alpha1=2.0, beta1=1.0,
+                                    alpha2=math.sqrt(2.0), beta2=2.0,
+                                    samples_per_phase=SAMPLES,
+                                    m_start=warm_m)
+        assert 0.5 < r < 2.0
+
+    def test_nsgd_equivalence_exact_denominator(self, warm_m):
+        """Same but with the exact E‖g‖² denominator (Assumption 2 not
+        imposed) — still equivalent at small batch."""
+        eta_n = ETA0 * math.sqrt(SIGMA2 * np.sum(LAM) / B0)
+        r = T.corollary1_risk_ratio(LAM, SIGMA2, eta0=eta_n, b0=B0,
+                                    alpha1=2.0, beta1=1.0,
+                                    alpha2=math.sqrt(2.0), beta2=2.0,
+                                    samples_per_phase=SAMPLES,
+                                    m_start=warm_m,
+                                    variance_dominated=False)
+        assert 0.4 < r < 2.5
+
+    def test_sgd_rule_wrong_for_nsgd(self, warm_m):
+        """Using the SGD rule (αβ const) under NSGD drifts more than the
+        Corollary-1 rule (α√β const) — the core of why Seesaw uses √α."""
+        eta_n = ETA0 * math.sqrt(SIGMA2 * np.sum(LAM) / B0)
+        good = T.corollary1_risk_ratio(LAM, SIGMA2, eta0=eta_n, b0=B0,
+                                       alpha1=2.0, beta1=1.0,
+                                       alpha2=math.sqrt(2.0), beta2=2.0,
+                                       samples_per_phase=SAMPLES,
+                                       m_start=warm_m)
+        bad = T.corollary1_risk_ratio(LAM, SIGMA2, eta0=eta_n, b0=B0,
+                                      alpha1=2.0, beta1=1.0,
+                                      alpha2=1.0, beta2=2.0,
+                                      samples_per_phase=SAMPLES,
+                                      m_start=warm_m)
+        assert abs(math.log(good)) < abs(math.log(bad))
+
+
+class TestLemma4:
+    def test_alpha_below_sqrt_beta_diverges(self, warm_m):
+        """α < √β: effective LR grows (√β/α)^k per phase ⇒ eventual
+        divergence of NSGD."""
+        eta_n = 0.5 * math.sqrt(SIGMA2 * np.sum(LAM) / B0) \
+            * T.stability_eta(LAM) / T.stability_eta(LAM)  # O(1) base
+        eta_n = 20 * ETA0 * math.sqrt(SIGMA2 * np.sum(LAM) / B0)
+        ph = T.phase_schedule(eta_n, B0, alpha=1.0, beta=4.0,
+                              samples_per_phase=[2048] * 14)
+        risks, _, _ = T.run_schedule(LAM, SIGMA2, ph, m0=warm_m,
+                                     normalized=True,
+                                     assume_variance_dominated=True)
+        assert (not np.isfinite(risks[-1])) or risks[-1] > 1e3 * risks[0]
+
+    def test_effective_lr_ratio(self):
+        from repro.core.seesaw import effective_lr_ratio
+        assert effective_lr_ratio(1.0, 4.0, 3) == pytest.approx(8.0)
+        assert effective_lr_ratio(math.sqrt(2), 2.0, 5) == pytest.approx(1.0)
+
+
+class TestNSGDReduction:
+    def test_variance_dominated_matches_rescaled_sgd(self, warm_m):
+        """Under Assumption 2, NSGD ≡ SGD with η̃ = η√B/(σ√TrH) (eq. 7)."""
+        trH = float(np.sum(LAM))
+        eta = 0.3
+        eta_sgd = eta * math.sqrt(B0) / math.sqrt(SIGMA2 * trH)
+        ph_n = [T.TheoryPhase(eta, B0, 500)]
+        ph_s = [T.TheoryPhase(eta_sgd, B0, 500)]
+        rn, _, mn = T.run_schedule(LAM, SIGMA2, ph_n, m0=warm_m,
+                                   normalized=True,
+                                   assume_variance_dominated=True)
+        rs, _, ms = T.run_schedule(LAM, SIGMA2, ph_s, m0=warm_m)
+        np.testing.assert_allclose(mn, ms, rtol=1e-10)
+
+    def test_grad_norm_decomposition(self, warm_m):
+        """E‖g‖² ≈ σ²TrH/B once bias is burned down (Assumption 2)."""
+        trH = float(np.sum(LAM))
+        e = np.zeros_like(LAM)
+        exact = T.effective_grad_norm_sq(warm_m, e, LAM, B0, SIGMA2)
+        approx = SIGMA2 * trH / B0
+        assert exact == pytest.approx(approx, rel=0.25)
+
+    def test_variance_term_shrinks_with_batch(self, warm_m):
+        e = np.zeros_like(LAM)
+        g8 = T.effective_grad_norm_sq(warm_m, e, LAM, 8, SIGMA2)
+        g64 = T.effective_grad_norm_sq(warm_m, e, LAM, 64, SIGMA2)
+        assert g8 / g64 == pytest.approx(8.0, rel=0.3)
