@@ -90,6 +90,28 @@ def step_decay_lr(base_lr: float, cut_tokens: Sequence[float],
     return lr
 
 
+def piecewise_lr(base_lr: float, warmup_tokens: float,
+                 phase_ends: Sequence[float],
+                 phase_scales: Sequence[float]) -> Callable:
+    """Device-side piecewise-constant LR: the traced form of
+    ``SeesawPlan.lr_at``.  ``phase_ends[k]`` is the end-token count of
+    phase k; the LR in phase k is ``base_lr * phase_scales[k]``.  The
+    lookup is a sum of comparisons against a constant array, so the
+    whole schedule lives inside the jitted train step — cosine, step
+    and seesaw share one traced code path and no host LR computation
+    happens per step."""
+    ends = jnp.asarray(np.asarray(phase_ends, np.float32))
+    scales = jnp.asarray(np.asarray(phase_scales, np.float32))
+
+    def lr(tok):
+        tok = jnp.asarray(tok, jnp.float32)
+        k = jnp.sum(tok >= ends[:-1])        # ≤ n-1 by construction
+        warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
+        return jnp.where(tok < warmup_tokens, warm, base_lr * scales[k])
+
+    return lr
+
+
 def constant_lr(base_lr: float, warmup_tokens: float = 0.0) -> Callable:
     def lr(tok):
         tok = jnp.asarray(tok, jnp.float32)

@@ -82,6 +82,20 @@ class SeesawPlan:
                 return p
         return self.phases[-1]
 
+    def realized_phase_at(self, tok: float, seq_len: int) -> Phase:
+        """Phase of the step that *starts* at ``tok``, under the
+        step-quantized boundaries of :meth:`steps_per_phase` — what the
+        loader and the engine's device LR actually use (the ideal
+        ``end_tokens`` can sit up to a step's carry past the realized
+        boundary)."""
+        tok = float(tok)
+        for p, n in zip(self.phases, self.steps_per_phase(seq_len)):
+            span = n * p.batch_size * seq_len
+            if tok < span - 0.5:
+                return p
+            tok -= span
+        return self.phases[-1]
+
     def lr_at(self, tok: float) -> float:
         if tok < self.warmup_tokens:
             return self.base_lr * tok / max(self.warmup_tokens, 1.0)

@@ -1,8 +1,25 @@
-"""Phase-aware data loading: follows a SeesawPlan's batch ramp, shards
-batches onto the mesh, and guarantees equal-token data order across
-schedulers (same underlying stream, different batch partitioning)."""
+"""Phase-aware data loading for the fused execution engine.
+
+Follows a SeesawPlan's batch ramp, shards batches onto the mesh, and
+guarantees equal-token data order across schedulers (same underlying
+stream indexed by absolute sequence number, different batch
+partitioning).  Two consumption modes:
+
+- ``__iter__`` — one (phase, step, batch) at a time (legacy eager path
+  and generic consumers);
+- ``iter_chunks(k)`` — stacked (K, B, ...) same-phase chunks feeding
+  the engine's K-step fused dispatch.
+
+Both modes double-buffer: a daemon thread runs the (Python-loop-heavy)
+synthetic sampling ahead of the consumer through a bounded queue, so
+host data production overlaps device compute.  ``resume(tokens_seen)``
+repositions the stream exactly on the step boundary a checkpoint was
+saved at, in the correct phase.
+"""
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Any, Dict, Iterator, Optional, Tuple
 
 import jax
@@ -14,40 +31,139 @@ from jax.sharding import PartitionSpec as P
 from repro.core.seesaw import SeesawPlan
 from repro.data.synthetic import MarkovLM
 
+_DONE = object()
+
 
 class PhaseDataLoader:
-    """Iterates (phase, step, batch) over a plan.
+    """Iterates a plan's (phase, step, batch) stream.
 
     The token stream is indexed by absolute sequence number, so a cosine
     run (constant B) and a Seesaw run (ramped B) consume identical
-    sequences in identical order at equal token counts.
+    sequences in identical order at equal token counts — and a resumed
+    run continues the exact stream of the uninterrupted one.
     """
 
     def __init__(self, source: MarkovLM, plan: SeesawPlan, seq_len: int,
-                 mesh=None, multi_pod: bool = False):
+                 mesh=None, multi_pod: bool = False, prefetch: int = 2):
         self.source = source
         self.plan = plan
         self.seq_len = seq_len
         self.mesh = mesh
         self.multi_pod = multi_pod
+        self.prefetch = prefetch
+        # (phase_idx, steps_done_in_phase, absolute seq cursor)
+        self._start: Tuple[int, int, int] = (0, 0, 0)
 
-    def _shard(self, batch: Dict[str, np.ndarray]):
+    # -- resume --------------------------------------------------------- #
+    def position_at(self, tokens_seen: float) -> Tuple[int, int, int]:
+        """(phase_idx, steps_done_in_phase, seq_cursor) for a token
+        count that lies on a step boundary of the plan."""
+        steps = self.plan.steps_per_phase(self.seq_len)
+        tok = float(tokens_seen)
+        cursor = 0
+        for pi, (p, n) in enumerate(zip(self.plan.phases, steps)):
+            per = p.batch_size * self.seq_len
+            done = int(round(tok / per))
+            if done < n:
+                if abs(done * per - tok) > 0.5:
+                    raise ValueError(
+                        f"tokens_seen={tokens_seen} is not on a step "
+                        f"boundary of phase {pi} (B={p.batch_size})")
+                return pi, done, cursor + done * p.batch_size
+            tok -= n * per
+            cursor += n * p.batch_size
+        return len(steps), 0, cursor
+
+    def resume(self, tokens_seen: float) -> "PhaseDataLoader":
+        """Reposition the stream to continue a checkpointed run."""
+        self._start = self.position_at(tokens_seen)
+        return self
+
+    # -- sharding -------------------------------------------------------- #
+    def _batch_axes(self):
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    def _shard(self, batch: Dict[str, np.ndarray], leading_dims: int = 1):
+        """Device-put a host batch; dims before the batch dim (the K
+        chunk dim) replicate, the batch dim shards over the data axes."""
         if self.mesh is None:
             return {k: jnp.asarray(v) for k, v in batch.items()}
-        axes = ("pod", "data") if self.multi_pod else ("data",)
+        axes = self._batch_axes()
         out = {}
         for k, v in batch.items():
-            spec = P(axes, *([None] * (v.ndim - 1)))
-            out[k] = jax.device_put(
-                v, NamedSharding(self.mesh, spec))
+            spec = P(*([None] * (leading_dims - 1)), axes,
+                     *([None] * (v.ndim - leading_dims)))
+            out[k] = jax.device_put(v, NamedSharding(self.mesh, spec))
         return out
 
-    def __iter__(self) -> Iterator[Tuple[Any, int, Dict[str, Any]]]:
-        seq_cursor = 0        # absolute sequence index into the stream
+    # -- host-side production ------------------------------------------- #
+    def _host_steps(self) -> Iterator[Tuple[Any, int, Dict]]:
         steps = self.plan.steps_per_phase(self.seq_len)
-        for phase, n_steps in zip(self.plan.phases, steps):
-            for s in range(n_steps):
-                batch = self.source.sample(seq_cursor, phase.batch_size,
+        p0, s0, cursor = self._start
+        for pi in range(p0, len(self.plan.phases)):
+            phase, n = self.plan.phases[pi], steps[pi]
+            for s in range(s0 if pi == p0 else 0, n):
+                batch = self.source.sample(cursor, phase.batch_size,
                                            self.seq_len)
-                seq_cursor += phase.batch_size
-                yield phase, s, self._shard(batch)
+                cursor += phase.batch_size
+                yield phase, s, batch
+
+    def _host_chunks(self, k: int) -> Iterator[Tuple[Any, Dict, int]]:
+        """Same stream, k same-phase steps at a time, sampled in one
+        vectorized call and stacked to (m, B, ...)."""
+        steps = self.plan.steps_per_phase(self.seq_len)
+        p0, s0, cursor = self._start
+        for pi in range(p0, len(self.plan.phases)):
+            phase, n = self.plan.phases[pi], steps[pi]
+            s = s0 if pi == p0 else 0
+            while s < n:
+                m = min(k, n - s)
+                b = phase.batch_size
+                raw = self.source.sample(cursor, m * b, self.seq_len)
+                chunk = {key: v.reshape(m, b, *v.shape[1:])
+                         for key, v in raw.items()}
+                cursor += m * b
+                s += m
+                yield phase, chunk, m
+
+    @staticmethod
+    def _prefetched(gen, depth: int):
+        """Run ``gen`` in a daemon thread, ``depth`` items ahead — the
+        double buffer that overlaps sampling with device compute.  (An
+        abandoned iterator parks the thread on the bounded queue; it is
+        a daemon and holds at most ``depth`` batches.)"""
+        q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+
+        def worker():
+            try:
+                for item in gen:
+                    q.put(item)
+                q.put(_DONE)
+            except BaseException as e:            # propagate to consumer
+                q.put(e)
+
+        threading.Thread(target=worker, daemon=True).start()
+        while True:
+            item = q.get()
+            if item is _DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+
+    # -- consumption ---------------------------------------------------- #
+    def __iter__(self) -> Iterator[Tuple[Any, int, Dict[str, Any]]]:
+        gen = self._host_steps()
+        if self.prefetch:
+            gen = self._prefetched(gen, self.prefetch)
+        for phase, s, batch in gen:
+            yield phase, s, self._shard(batch)
+
+    def iter_chunks(self, k: int) -> Iterator[Tuple[Any, Dict, int]]:
+        """Yield (phase, stacked sharded chunk of m ≤ k steps, m) for
+        the engine's fused dispatch."""
+        gen = self._host_chunks(k)
+        if self.prefetch:
+            gen = self._prefetched(gen, self.prefetch)
+        for phase, chunk, m in gen:
+            yield phase, self._shard(chunk, leading_dims=2), m

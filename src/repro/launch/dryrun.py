@@ -3,7 +3,11 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape)
-on the production meshes and extract the roofline terms.
+on the production meshes and extract the roofline terms.  The train
+workload comes from the phase execution engine's step builder (via
+``launch.steps.build_workload``) — the same compiled step the Trainer
+dispatches, so the dry-run's memory/collective analysis describes the
+real hot path.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
         --shape train_4k [--multipod] [--out artifacts/dryrun]

@@ -1,23 +1,32 @@
-"""Workload step functions + sharding trees for the dry-run and the real
-launcher: builds (fn, arg structs, in/out shardings) per (arch × shape ×
-mesh) without allocating anything (jax.eval_shape for params/opt state).
+"""Workload wiring for the dry-run and the real launcher: builds
+(fn, arg structs, in/out shardings) per (arch × shape × mesh) without
+allocating anything (jax.eval_shape for params/opt state).
+
+The train step itself is NOT defined here: it comes from the phase
+execution engine (``repro.train.engine.make_grad_step``), the single
+``value_and_grad`` call site shared with ``Trainer`` — this module only
+pairs it with eval-shape structs and sharding trees.  The sharding-tree
+helpers (``param_structs`` / ``opt_structs`` / ``opt_state_specs`` /
+``_named``) are re-exports from the engine.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import (InputShape, ModelConfig, OptimizerConfig)
+from repro.configs.base import InputShape, ModelConfig
 from repro.models import registry as R
-from repro.optim import optimizers as O
+from repro.train.engine import (make_grad_step, named_shardings,
+                                opt_state_specs, opt_structs,
+                                param_structs)
 
 # long_500k requires sub-quadratic decoding (DESIGN.md §6)
 LONG_CONTEXT_ARCHS = {"recurrentgemma-9b", "mamba2-2.7b", "starcoder2-3b"}
+
+_named = named_shardings        # legacy name used by dryrun and tests
 
 
 def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
@@ -25,36 +34,6 @@ def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
         return False, ("skipped: full-attention arch at 500k decode "
                        "(see DESIGN.md §6)")
     return True, ""
-
-
-def _named(mesh, tree):
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s), tree,
-        is_leaf=lambda x: isinstance(x, P))
-
-
-def param_structs(cfg: ModelConfig):
-    return jax.eval_shape(
-        lambda: R.init_params(jax.random.PRNGKey(0), cfg))
-
-
-def opt_structs(cfg: ModelConfig, params_struct, kind: str = "adamw"):
-    opt = O.from_config(OptimizerConfig(kind=kind))
-    return opt, jax.eval_shape(opt.init, params_struct)
-
-
-def opt_state_specs(param_spec_tree, opt_state_struct):
-    """Mirror param specs onto m/v slots; scalars replicated."""
-    def spec_for(path_leaf, struct):
-        return path_leaf
-
-    out = {}
-    for k, v in opt_state_struct.items():
-        if k in ("m", "v", "mu"):
-            out[k] = param_spec_tree
-        else:
-            out[k] = P()
-    return out
 
 
 def build_workload(cfg: ModelConfig, shape: InputShape, *,
@@ -77,18 +56,14 @@ def build_workload(cfg: ModelConfig, shape: InputShape, *,
     if shape.mode == "train":
         opt, ostruct = opt_structs(cfg, pstruct, opt_kind)
         ospec = opt_state_specs(pspec, ostruct)
+        step = make_grad_step(cfg, opt, z_loss=z_loss, dtype=dtype,
+                              remat=remat, multi_pod=multi_pod,
+                              block_skip=block_skip, seq_shard=seq_shard,
+                              remat_policy=remat_policy)
 
         def train_step(params, opt_state, batch, lr):
-            def loss_of(p):
-                return R.loss_fn(p, cfg, batch, z_loss=z_loss, dtype=dtype,
-                                 remat=remat, multi_pod=multi_pod,
-                                 block_skip=block_skip,
-                                 seq_shard=seq_shard,
-                                 remat_policy=remat_policy)
-
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_of, has_aux=True)(params)
-            new_params, new_opt = opt.update(grads, opt_state, params, lr)
+            new_params, new_opt, metrics = step(params, opt_state,
+                                                batch, lr)
             return new_params, new_opt, metrics["loss"]
 
         args = (pstruct, ostruct, istruct,

@@ -1,12 +1,16 @@
-"""Production training launcher.
+"""Production training launcher, driving the phase execution engine.
 
     PYTHONPATH=src python -m repro.launch.train --arch seesaw-150m \
-        --schedule seesaw --steps 200 [--mesh 2x2] [--multipod]
+        --schedule seesaw --steps 200 [--mesh 2x2] [--multipod] \
+        [--fuse-steps 16] [--checkpoint ckpt.npz] [--resume]
 
 On real hardware the mesh comes from the platform; on this container a
 small host-device mesh (--host-devices N) exercises the identical pjit
-path.  The Seesaw runtime (per-phase compile cache, batch ramp, token-
-indexed LR) is the same object the quickstart example uses.
+path.  The runtime is the same ``Trainer``/``PhaseEngine`` stack the
+quickstart example uses: per-phase compile cache, batch ramp, LR curve
+evaluated on device, ``--fuse-steps K`` batches per host dispatch, and
+phase-aware checkpointing (``--resume`` repositions the data stream on
+the exact step boundary of the saved run).
 """
 from __future__ import annotations
 
@@ -35,6 +39,11 @@ def main():
     ap.add_argument("--z-loss", type=float, default=0.0)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore --checkpoint and continue the run")
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="K batches per fused dispatch (1 = eager)")
+    ap.add_argument("--max-device-batch", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -47,7 +56,6 @@ def main():
     from repro.configs import (OptimizerConfig, RunConfig, ScheduleConfig,
                                get_config)
     from repro.data import MarkovLM, PhaseDataLoader
-    from repro.train import checkpoint as CKPT
     from repro.train.trainer import Trainer
 
     model = get_config(args.arch)
@@ -74,13 +82,22 @@ def main():
             else ("pod", "data", "model")
         mesh = jax.make_mesh(tuple(dims), names)
 
-    trainer = Trainer(cfg, mesh=mesh)
+    trainer = Trainer(cfg, mesh=mesh, fuse_steps=args.fuse_steps,
+                      max_device_batch=args.max_device_batch)
     print(f"arch={model.name} N={model.param_count()/1e6:.0f}M "
           f"schedule={args.schedule} phases={len(trainer.plan.phases)} "
           f"steps={trainer.plan.total_steps(seq_len)} "
-          f"batches={trainer.plan.batch_sizes()}")
+          f"batches={trainer.plan.batch_sizes()} "
+          f"fuse_steps={trainer.fuse_steps}")
     src = MarkovLM(vocab_size=min(model.vocab_size, 2048), seed=args.seed)
     loader = PhaseDataLoader(src, trainer.plan, seq_len, mesh=mesh)
+    if args.resume:
+        assert args.checkpoint, "--resume needs --checkpoint"
+        meta = trainer.restore_checkpoint(args.checkpoint)
+        loader.resume(trainer.state.tokens_seen)
+        print(f"resumed step {trainer.state.step} "
+              f"(phase {meta.get('phase')}, B={meta.get('batch_size')}, "
+              f"tokens {trainer.state.tokens_seen:.0f})")
 
     def log(rec):
         print(f"step {rec['step']:5d} phase {rec['phase']} "
@@ -88,11 +105,13 @@ def main():
               f"loss={rec['loss']:.4f} ({rec['wall']:.1f}s)")
 
     hist = trainer.run(loader, max_steps=args.steps, log_cb=log)
-    print(f"done: {len(hist)} steps, final loss {hist[-1]['loss']:.4f}")
+    if hist:
+        print(f"done: {len(hist)} steps, final loss "
+              f"{hist[-1]['loss']:.4f}")
+    else:
+        print("done: nothing to run (plan already consumed)")
     if args.checkpoint:
-        CKPT.save(args.checkpoint, trainer.state.params,
-                  trainer.state.opt_state, trainer.state.step,
-                  trainer.state.tokens_seen)
+        trainer.save_checkpoint(args.checkpoint)
         print(f"checkpoint → {args.checkpoint}")
 
 

@@ -1,4 +1,6 @@
 from repro.train.trainer import Trainer, TrainState, make_train_step
-from repro.train import checkpoint
+from repro.train import checkpoint, engine
+from repro.train.engine import PhaseEngine, make_grad_step
 
-__all__ = ["Trainer", "TrainState", "make_train_step", "checkpoint"]
+__all__ = ["Trainer", "TrainState", "make_train_step", "checkpoint",
+           "engine", "PhaseEngine", "make_grad_step"]

@@ -1,7 +1,12 @@
 """Checkpointing: params/opt-state/step/tokens to a single .npz with
 path-flattened keys — dependency-free, works for any pytree of arrays.
-Seesaw phase boundaries are the natural checkpoint points (the batch
-size of the resumed phase is recovered from the plan + tokens_seen)."""
+
+Phase-aware save/resume: ``save_phase_checkpoint`` records the plan
+position (phase index, batch size, schedule kind) next to
+``tokens_seen``; ``restore_phase_checkpoint`` validates that the
+restoring run's plan lands the same token count in the same phase, so
+the engine resumes with the correct compiled step (batch size) and the
+device-side LR curve picks up exactly where it left off."""
 from __future__ import annotations
 
 import json
@@ -64,4 +69,51 @@ def restore(path: str, params_template, opt_template
     opt = _unflatten_into(opt_template, flat_o)
     with open(base + ".meta.json") as f:
         meta = json.load(f)
+    return params, opt, meta
+
+
+# --------------------------------------------------------------------- #
+# phase-aware save/resume
+# --------------------------------------------------------------------- #
+
+def _plan_phase(plan, tokens_seen: float, seq_len):
+    """Phase the next step belongs to — realized (step-quantized)
+    boundaries when seq_len is known, matching the loader and the
+    device LR; ideal token boundaries otherwise."""
+    if seq_len:
+        return plan.realized_phase_at(tokens_seen, seq_len)
+    return plan.phase_at_tokens(tokens_seen)
+
+
+def save_phase_checkpoint(path: str, params, opt_state, step: int,
+                          tokens_seen: float, *, plan,
+                          seq_len: int | None = None,
+                          extra: Dict[str, Any] | None = None):
+    """Like :func:`save`, plus the plan position at ``tokens_seen``:
+    the phase the *next* step belongs to and its batch size."""
+    ph = _plan_phase(plan, tokens_seen, seq_len)
+    meta = {"phase": ph.index, "batch_size": ph.batch_size,
+            "schedule_kind": plan.kind,
+            "total_tokens": plan.total_tokens, **(extra or {})}
+    save(path, params, opt_state, step, tokens_seen, extra=meta)
+
+
+def restore_phase_checkpoint(path: str, params_template, opt_template,
+                             *, plan, seq_len: int | None = None
+                             ) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Restore and verify the plan agrees with the checkpoint: the
+    restored ``tokens_seen`` must land in the recorded phase with the
+    recorded batch size, or the resumed run would silently train with
+    the wrong compiled step / LR scale."""
+    params, opt, meta = restore(path, params_template, opt_template)
+    if "phase" in meta:
+        ph = _plan_phase(plan, float(meta["tokens_seen"]), seq_len)
+        if (ph.index != meta["phase"]
+                or ph.batch_size != meta["batch_size"]):
+            raise ValueError(
+                f"checkpoint was saved in phase {meta['phase']} "
+                f"(batch {meta['batch_size']}) but this plan puts "
+                f"tokens_seen={meta['tokens_seen']:.0f} in phase "
+                f"{ph.index} (batch {ph.batch_size}) — schedule "
+                f"mismatch between save and resume")
     return params, opt, meta

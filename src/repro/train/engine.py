@@ -1,0 +1,291 @@
+"""The phase execution engine — the single train-step stack.
+
+Every entry point (``Trainer``, ``launch.train``, ``launch.dryrun`` via
+``launch.steps``, benchmarks, examples) drives the same step builder,
+so there is exactly one ``value_and_grad`` call site for training in
+the repo.  The engine owns four layers:
+
+1. ``make_grad_step`` — the inner step ``(params, opt_state, batch, lr)
+   → (params, opt_state, metrics)``.  Gradient accumulation is a
+   ``lax.scan`` over microbatches: the trace size is constant at any
+   accumulation count, so the batch ramp changes a scan trip count,
+   never the program size.
+2. ``plan_lr_fn`` — the token-indexed LR schedule as a traced device
+   function of ``tokens_seen``.  Cosine (continuous) and
+   step/seesaw/constant (piecewise) share one code path inside the
+   jitted step; no host LR computation happens per step.
+3. ``make_fused_step`` — K-step fused dispatch: ``lax.scan`` over a
+   stacked chunk of K batches per host round-trip.  Metrics come back
+   stacked ``(K,)`` on device and are only transferred at ``log_every``
+   boundaries (the caller decides when to ``device_get``).
+4. ``PhaseEngine`` — per-(batch_size, micro, K) compile cache of
+   donated, ``NamedSharding``-annotated jitted steps.  A phase change
+   (new global batch) is one retrace; K=1 is the eager path and runs
+   through the identical scan body, so fused and eager trajectories
+   match bitwise.
+
+Sharding-tree helpers (``param_structs`` / ``opt_structs`` /
+``opt_state_specs`` / ``named_shardings``) live here too and are
+re-exported by ``launch.steps`` for the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig
+from repro.core import schedules as S
+from repro.core.seesaw import SeesawPlan
+from repro.models import registry as R
+from repro.optim import optimizers as O
+
+Params = Any
+
+
+# --------------------------------------------------------------------- #
+# sharding-tree helpers (shared with launch.steps)
+# --------------------------------------------------------------------- #
+
+def named_shardings(mesh, tree):
+    """PartitionSpec tree → NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: R.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_structs(cfg: ModelConfig, params_struct, kind: str = "adamw"):
+    opt = O.from_config(OptimizerConfig(kind=kind))
+    return opt, jax.eval_shape(opt.init, params_struct)
+
+
+def opt_state_specs(param_spec_tree, opt_state_struct):
+    """Mirror param specs onto the m/v/mu slots; scalars replicated."""
+    out = {}
+    for k in opt_state_struct:
+        if k in ("m", "v", "mu"):
+            out[k] = param_spec_tree
+        else:
+            out[k] = P()
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 1. the single grad step
+# --------------------------------------------------------------------- #
+
+def make_grad_step(cfg: ModelConfig, optimizer: O.Optimizer, *,
+                   micro_batches: int = 1, z_loss: float = 0.0,
+                   dtype=jnp.bfloat16, remat: bool = True,
+                   multi_pod: bool = False, **loss_kw) -> Callable:
+    """The one training step builder: ``step(params, opt_state, batch,
+    lr) → (params, opt_state, metrics)``.  jit-able; batch shapes decide
+    the compile cache key.  Extra ``loss_kw`` (block_skip, seq_shard,
+    remat_policy, …) forward to the family loss function."""
+
+    def loss_of(params, batch):
+        return R.loss_fn(params, cfg, batch, z_loss=z_loss, dtype=dtype,
+                         remat=remat, multi_pod=multi_pod, **loss_kw)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def step(params, opt_state, batch, lr):
+        if micro_batches > 1:
+            def split(x):
+                b = x.shape[0] // micro_batches
+                return x.reshape(micro_batches, b, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                (l_aux, g) = grad_fn(params, mb)
+                gacc = jax.tree.map(jnp.add, carry, g)
+                l, aux = l_aux
+                return gacc, dict(aux, loss=l)
+
+            gacc, metrics = jax.lax.scan(
+                accum, jax.tree.map(jnp.zeros_like, params), micro)
+            grads = jax.tree.map(lambda g: g / micro_batches, gacc)
+            metrics = jax.tree.map(jnp.mean, metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                               lr)
+        metrics = {k: jnp.asarray(v, jnp.float32)
+                   for k, v in metrics.items()}
+        metrics["grad_norm"] = O._global_norm(grads)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+# --------------------------------------------------------------------- #
+# 2. device-side token-indexed LR
+# --------------------------------------------------------------------- #
+
+def plan_lr_fn(plan: SeesawPlan,
+               seq_len: Optional[int] = None) -> Callable:
+    """The plan's LR curve as a traced function of tokens_seen.  Cosine
+    plans get the continuous quarter-cosine (Lemma 1); every piecewise
+    kind gets :func:`schedules.piecewise_lr` over the phase table.
+
+    With ``seq_len`` the cut thresholds are the *realized* phase starts
+    (step-quantized via ``steps_per_phase``), not the ideal token cut
+    points — the loader switches batch size on step boundaries, and the
+    LR cut must land on the same step so each step trains with its
+    phase's (lr, batch) pair."""
+    if plan.kind == "cosine":
+        return S.quarter_cosine_lr(plan.base_lr, plan.total_tokens,
+                                   plan.warmup_tokens)
+    if seq_len:
+        ends, tok = [], 0.0
+        for p, n in zip(plan.phases, plan.steps_per_phase(seq_len)):
+            tok += n * p.batch_size * seq_len
+            ends.append(tok)
+    else:
+        ends = [p.end_tokens for p in plan.phases]
+    return S.piecewise_lr(plan.base_lr, plan.warmup_tokens, ends,
+                          [p.lr_scale for p in plan.phases])
+
+
+# --------------------------------------------------------------------- #
+# 3. K-step fused dispatch
+# --------------------------------------------------------------------- #
+
+def make_fused_step(grad_step: Callable, lr_fn: Callable,
+                    tokens_per_step: float) -> Callable:
+    """Wrap a grad step into ``fused(params, opt_state, tokens_seen,
+    batches)`` where ``batches`` has a leading K dim.  One host dispatch
+    covers K optimizer steps; the LR is evaluated on device from the
+    running token count; metrics (plus the per-step ``lr``) return
+    stacked ``(K,)``."""
+    tps = jnp.float32(tokens_per_step)
+
+    def fused(params, opt_state, tokens_seen, batches):
+        def body(carry, batch):
+            params, opt_state, tok = carry
+            lr = lr_fn(tok)
+            params, opt_state, metrics = grad_step(params, opt_state,
+                                                   batch, lr)
+            metrics["lr"] = jnp.asarray(lr, jnp.float32)
+            return (params, opt_state, tok + tps), metrics
+
+        carry = (params, opt_state, jnp.asarray(tokens_seen, jnp.float32))
+        (params, opt_state, _), metrics = jax.lax.scan(body, carry,
+                                                       batches)
+        return params, opt_state, metrics
+
+    return fused
+
+
+# --------------------------------------------------------------------- #
+# 4. the engine
+# --------------------------------------------------------------------- #
+
+class PhaseEngine:
+    """Compile cache + dispatcher for one run.
+
+    Keys are ``(batch_size, micro_batches, K)``; each entry is one
+    donated jitted fused step, sharding-annotated when a mesh is given.
+    The batch ramp walks batch sizes, so a P-phase plan compiles at
+    most P (+1 for a remainder chunk size) programs.
+    """
+
+    def __init__(self, cfg: RunConfig, optimizer: O.Optimizer,
+                 plan: SeesawPlan, *, mesh=None, multi_pod: bool = False,
+                 max_device_batch: Optional[int] = None):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.plan = plan
+        self.mesh = mesh
+        self.multi_pod = multi_pod
+        self.max_device_batch = max_device_batch
+        self.lr_fn = plan_lr_fn(plan, cfg.seq_len)
+        self.dtype = (jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32)
+        self._cache: Dict[Tuple[int, int, int], Callable] = {}
+
+    # -- mesh geometry -------------------------------------------------- #
+    def n_data_devices(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in ("pod", "data")
+                            if a in self.mesh.shape])) or 1
+
+    def micro_batches(self, batch_size: int) -> int:
+        """Accumulation count for a global batch.  The microbatch is a
+        slice of the *global* batch, so it must both divide the global
+        batch and still split evenly across the data devices — checking
+        only ``batch_size % micro`` (the old trainer bug) can pick a
+        micro whose per-device share is fractional."""
+        if not self.max_device_batch:
+            return 1
+        n_dev = self.n_data_devices()
+        per_dev = batch_size // max(n_dev, 1)
+        micro = max(-(-per_dev // self.max_device_batch), 1)
+        while micro < batch_size and (
+                batch_size % micro or (batch_size // micro) % n_dev):
+            micro += 1
+        return micro
+
+    # -- sharding specs ------------------------------------------------- #
+    def _batch_axes(self):
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    def _in_shardings(self, stacked_batch):
+        """(params, opt_state, tokens, batches) NamedShardings."""
+        pspec = R.param_specs(self.cfg.model, self.multi_pod)
+        pstruct = param_structs(self.cfg.model)
+        ostruct = jax.eval_shape(self.optimizer.init, pstruct)
+        ospec = opt_state_specs(pspec, ostruct)
+        axes = self._batch_axes()
+
+        def bspec(x):
+            # leading K dim replicated, batch dim sharded over data axes
+            return P(None, axes, *([None] * (x.ndim - 2)))
+
+        bspecs = jax.tree.map(bspec, stacked_batch)
+        return named_shardings(self.mesh,
+                               (pspec, ospec, P(), bspecs))
+
+    # -- compile cache -------------------------------------------------- #
+    def compiled_step(self, batch_size: int, k: int,
+                      stacked_batch=None) -> Callable:
+        micro = self.micro_batches(batch_size)
+        key = (batch_size, micro, k)
+        if key not in self._cache:
+            grad = make_grad_step(self.cfg.model, self.optimizer,
+                                  micro_batches=micro,
+                                  z_loss=self.cfg.z_loss,
+                                  dtype=self.dtype,
+                                  remat=self.cfg.remat,
+                                  multi_pod=self.multi_pod)
+            fused = make_fused_step(grad, self.lr_fn,
+                                    batch_size * self.cfg.seq_len)
+            kw = {}
+            if self.mesh is not None and stacked_batch is not None:
+                kw["in_shardings"] = self._in_shardings(stacked_batch)
+            self._cache[key] = jax.jit(fused, donate_argnums=(0, 1),
+                                       **kw)
+        return self._cache[key]
+
+    # -- dispatch ------------------------------------------------------- #
+    def run_chunk(self, params, opt_state, tokens_seen: float,
+                  stacked_batch):
+        """One host round-trip: K fused optimizer steps.  Returns
+        (params, opt_state, stacked device metrics) without forcing a
+        transfer — the caller flushes metrics at log boundaries."""
+        leaves = jax.tree.leaves(stacked_batch)
+        k, batch_size = leaves[0].shape[0], leaves[0].shape[1]
+        fn = self.compiled_step(batch_size, k, stacked_batch)
+        return fn(params, opt_state, jnp.float32(tokens_seen),
+                  stacked_batch)

@@ -1,31 +1,33 @@
-"""The Seesaw training runtime.
+"""The Seesaw training runtime, driving the phase execution engine.
 
 The batch ramp is a first-class feature: the trainer walks the plan's
-phases, keeps a compiled train-step per distinct global batch size
-(shape change ⇒ one retrace, then cached), carries params/optimizer
-state across the boundary untouched, and keeps the LR curve token-
-indexed so cosine (continuous) and seesaw/step (piecewise) schedulers
-share one code path.
+phases and lets :class:`repro.train.engine.PhaseEngine` keep one
+donated, sharding-annotated compiled step per distinct global batch
+size (shape change ⇒ one retrace, then cached).  Params and optimizer
+state cross phase boundaries untouched.
 
-Gradient accumulation: if a phase's global batch exceeds
-``max_device_batch``, the step scans microbatches and averages grads —
-the ramp then changes accumulation count, not the jitted shape.
+Unlike the old eager loop, nothing schedule-related happens on host per
+step: the token-indexed LR curve is evaluated inside the jitted step,
+K steps are fused into one dispatch (``fuse_steps``), and metrics stay
+on device until a ``log_every`` boundary forces a transfer.  Gradient
+accumulation (phase batch > ``max_device_batch``) is a ``lax.scan``
+over microbatches, so the ramp changes a trip count, not the trace.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import RunConfig
-from repro.core import schedules as S
-from repro.core.seesaw import SeesawPlan, build_plan
+from repro.core.seesaw import build_plan
 from repro.models import registry as R
 from repro.optim import optimizers as O
+from repro.train import checkpoint as CKPT
+from repro.train import engine as E
 
 Params = Any
 
@@ -41,56 +43,25 @@ class TrainState:
 def make_train_step(cfg: RunConfig, optimizer: O.Optimizer, *,
                     multi_pod: bool = False,
                     micro_batches: int = 1) -> Callable:
-    """Returns step(params, opt_state, batch, lr) → (params, opt_state,
-    metrics).  jit-able; batch shapes decide the compile cache key."""
-    mcfg = cfg.model
+    """Compatibility wrapper over the engine's single step builder:
+    step(params, opt_state, batch, lr) → (params, opt_state, metrics)."""
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-
-    def loss_of(params, batch):
-        return R.loss_fn(params, mcfg, batch, z_loss=cfg.z_loss,
-                         dtype=dtype, remat=cfg.remat,
-                         multi_pod=multi_pod)
-
-    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
-
-    def step(params, opt_state, batch, lr):
-        if micro_batches > 1:
-            def split(x):
-                b = x.shape[0] // micro_batches
-                return x.reshape(micro_batches, b, *x.shape[1:])
-
-            micro = jax.tree.map(split, batch)
-            gacc = jax.tree.map(jnp.zeros_like, params)
-            loss_acc = 0.0
-            aux = None
-            for i in range(micro_batches):
-                mb = jax.tree.map(lambda x, i=i: x[i], micro)
-                (l, aux), g = grad_fn(params, mb)
-                gacc = jax.tree.map(jnp.add, gacc, g)
-                loss_acc = loss_acc + l
-            grads = jax.tree.map(lambda g: g / micro_batches, gacc)
-            loss = loss_acc / micro_batches
-            metrics = dict(aux)
-            metrics["loss"] = loss
-        else:
-            (loss, metrics), grads = grad_fn(params, batch)
-        new_params, new_opt = optimizer.update(grads, opt_state, params,
-                                               lr)
-        metrics = {k: jnp.asarray(v, jnp.float32)
-                   for k, v in metrics.items()}
-        metrics["grad_norm"] = O._global_norm(grads)
-        return new_params, new_opt, metrics
-
-    return step
+    return E.make_grad_step(cfg.model, optimizer,
+                            micro_batches=micro_batches,
+                            z_loss=cfg.z_loss, dtype=dtype,
+                            remat=cfg.remat, multi_pod=multi_pod)
 
 
 class Trainer:
     def __init__(self, cfg: RunConfig, *, mesh=None, multi_pod: bool = False,
-                 max_device_batch: Optional[int] = None, seed: int = 0):
+                 max_device_batch: Optional[int] = None, seed: int = 0,
+                 fuse_steps: Optional[int] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.multi_pod = multi_pod
         self.max_device_batch = max_device_batch
+        self.fuse_steps = max(int(fuse_steps or getattr(cfg, "fuse_steps",
+                                                        1) or 1), 1)
         total = cfg.resolved_total_tokens()
         sch = cfg.schedule
         self.plan = build_plan(
@@ -101,9 +72,9 @@ class Trainer:
                   else None),
             n_cuts=sch.n_cuts, max_batch_size=sch.max_batch_size)
         self.optimizer = O.from_config(cfg.optimizer)
-        self._cosine = S.quarter_cosine_lr(sch.base_lr, total,
-                                           sch.warmup_frac * total)
-        self._step_cache: Dict[Tuple, Callable] = {}
+        self.engine = E.PhaseEngine(cfg, self.optimizer, self.plan,
+                                    mesh=mesh, multi_pod=multi_pod,
+                                    max_device_batch=max_device_batch)
         key = jax.random.PRNGKey(cfg.seed + seed)
         params = R.init_params(key, cfg.model)
         opt_state = self.optimizer.init(params)
@@ -111,56 +82,118 @@ class Trainer:
         self.history: List[Dict[str, float]] = []
 
     # ------------------------------------------------------------------ #
-    def lr_at(self, tokens: float) -> float:
-        if self.cfg.schedule.kind == "cosine":
-            return float(self._cosine(tokens))
-        return self.plan.lr_at(tokens)
+    @property
+    def _step_cache(self):
+        return self.engine._cache
 
-    def _compiled_step(self, batch_size: int, micro: int) -> Callable:
-        key = (batch_size, micro)
-        if key not in self._step_cache:
-            fn = make_train_step(self.cfg, self.optimizer,
-                                 multi_pod=self.multi_pod,
-                                 micro_batches=micro)
-            self._step_cache[key] = jax.jit(fn, donate_argnums=(0, 1))
-        return self._step_cache[key]
+    def lr_at(self, tokens: float) -> float:
+        """Host-side probe of the exact curve the jitted step evaluates
+        on device (``engine.plan_lr_fn`` — piecewise cuts land on the
+        realized step-quantized phase boundaries, not the plan's ideal
+        token cut points)."""
+        return float(self.engine.lr_fn(tokens))
 
     def _micro(self, batch_size: int) -> int:
-        if not self.max_device_batch:
-            return 1
-        n_dev = 1 if self.mesh is None else int(np.prod(
-            [self.mesh.shape[a] for a in ("pod", "data")
-             if a in self.mesh.shape])) or 1
-        per_dev = batch_size // max(n_dev, 1)
-        micro = -(-per_dev // self.max_device_batch)
-        while batch_size % micro:
-            micro += 1
-        return micro
+        return self.engine.micro_batches(batch_size)
+
+    # -- checkpointing -------------------------------------------------- #
+    def save_checkpoint(self, path: str):
+        CKPT.save_phase_checkpoint(path, self.state.params,
+                                   self.state.opt_state, self.state.step,
+                                   self.state.tokens_seen, plan=self.plan,
+                                   seq_len=self.cfg.seq_len)
+
+    def restore_checkpoint(self, path: str) -> Dict[str, Any]:
+        p, s, meta = CKPT.restore_phase_checkpoint(
+            path, self.state.params, self.state.opt_state, plan=self.plan,
+            seq_len=self.cfg.seq_len)
+        self.state.params, self.state.opt_state = p, s
+        self.state.step = int(meta["step"])
+        self.state.tokens_seen = float(meta["tokens_seen"])
+        return meta
+
+    # -- fused run loop ------------------------------------------------- #
+    def _chunks(self, loader, max_steps):
+        """Yield (phase, stacked_batches, k): chunks of ≤ fuse_steps
+        same-phase batches.  Uses the loader's double-buffered
+        ``iter_chunks`` when available; any plain (phase, step, batch)
+        iterator works as a fallback (chunked by stacking on device)."""
+        k = self.fuse_steps
+        st = self.state
+
+        def budget():
+            return None if max_steps is None else max_steps - st.step
+
+        if hasattr(loader, "iter_chunks"):
+            for phase, stacked, n in loader.iter_chunks(k):
+                r = budget()
+                if r is not None and r <= 0:
+                    return
+                if r is not None and n > r:
+                    stacked = jax.tree.map(lambda x: x[:r], stacked)
+                    n = r
+                yield phase, stacked, n
+            return
+
+        buf: List[Any] = []
+        cur_phase = None
+        for phase, _pstep, batch in loader:
+            if max_steps is not None and st.step + len(buf) >= max_steps:
+                break
+            if buf and (phase.index != cur_phase.index or len(buf) == k):
+                yield (cur_phase,
+                       jax.tree.map(lambda *xs: jnp.stack(xs), *buf),
+                       len(buf))
+                buf = []
+            cur_phase = phase
+            buf.append(batch)
+        if buf:
+            r = budget()
+            if r is not None and len(buf) > r:
+                buf = buf[:r]
+            if buf:
+                yield (cur_phase,
+                       jax.tree.map(lambda *xs: jnp.stack(xs), *buf),
+                       len(buf))
+
+    def _flush(self, pending, log_cb):
+        """Device→host metric transfer, deferred to log boundaries."""
+        le = max(self.cfg.log_every, 1)
+        for base_step, base_tok, phase, wall, metrics, k in pending:
+            host = jax.device_get(metrics)
+            tok_per_step = phase.batch_size * self.cfg.seq_len
+            for i in range(k):
+                rec = {"step": base_step + i + 1,
+                       "tokens": base_tok + (i + 1) * tok_per_step,
+                       "lr": float(host["lr"][i]),
+                       "batch_size": phase.batch_size,
+                       "phase": phase.index,
+                       "loss": float(host["loss"][i]),
+                       "wall": wall}
+                for name, v in host.items():
+                    if name not in ("loss", "lr"):
+                        rec[name] = float(v[i])
+                self.history.append(rec)
+                if log_cb and rec["step"] % le == 0:
+                    log_cb(rec)
+        pending.clear()
 
     def run(self, loader, max_steps: Optional[int] = None,
             log_cb: Optional[Callable] = None) -> List[Dict[str, float]]:
         st = self.state
         t0 = time.time()
-        for phase, pstep, batch in loader:
-            if max_steps is not None and st.step >= max_steps:
-                break
-            lr = self.lr_at(st.tokens_seen)
-            micro = self._micro(phase.batch_size)
-            fn = self._compiled_step(phase.batch_size, micro)
-            params, opt_state, metrics = fn(
-                st.params, st.opt_state, batch, jnp.asarray(lr, jnp.float32))
+        le = max(self.cfg.log_every, 1)
+        pending: List[Tuple] = []
+        for phase, stacked, k in self._chunks(loader, max_steps):
+            params, opt_state, metrics = self.engine.run_chunk(
+                st.params, st.opt_state, st.tokens_seen, stacked)
+            base_step, base_tok = st.step, st.tokens_seen
             st.params, st.opt_state = params, opt_state
-            tok = phase.batch_size * self.cfg.seq_len
-            st.tokens_seen += tok
-            st.step += 1
-            rec = {"step": st.step, "tokens": st.tokens_seen, "lr": lr,
-                   "batch_size": phase.batch_size, "phase": phase.index,
-                   "loss": float(metrics["loss"]),
-                   "wall": time.time() - t0}
-            for k, v in metrics.items():
-                if k != "loss":
-                    rec[k] = float(v)
-            self.history.append(rec)
-            if log_cb and (st.step % self.cfg.log_every == 0):
-                log_cb(rec)
+            st.step += k
+            st.tokens_seen += k * phase.batch_size * self.cfg.seq_len
+            pending.append((base_step, base_tok, phase,
+                            time.time() - t0, metrics, k))
+            if st.step // le > base_step // le:
+                self._flush(pending, log_cb)
+        self._flush(pending, log_cb)
         return self.history

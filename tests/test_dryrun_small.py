@@ -37,6 +37,8 @@ with mesh:
     lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
     compiled = lowered.compile()
 ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):      # older jax: one dict per device
+    ca = ca[0] if ca else {}
 print(json.dumps({"ok": True, "flops": float(ca.get("flops", -1))}))
 """
 

@@ -1,9 +1,13 @@
 """Property-based tests (hypothesis) on the scheduling system's
-invariants."""
+invariants.  Skipped (not a collection error) when hypothesis is not
+installed — install via the ``dev`` extra in pyproject.toml."""
 import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
