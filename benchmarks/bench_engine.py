@@ -19,9 +19,13 @@ path:
   fused win shrinks toward the compute floor, which is the point: the
   overhead fusion removes is a constant per step, not a fraction.
 
-Timed step counts are multiples of every K so no chunk-remainder
-retrace lands inside the timed region (the engine caches one program
-per (batch, micro, K)).
+Timed step counts are multiples of every K so the timed region is
+steady-state (the merged, tail-padded chunk stream compiles one
+program per distinct batch size regardless).  Each run also reports
+its compile/executable count — the artifact carries a ``compiles``
+section measuring the "one executable per distinct batch size" claim
+on multi-phase ramps (seesaw: one per ramp stage; 'step': a single
+merged-segment program even though the plan has several phases).
 
     PYTHONPATH=src python -m benchmarks.bench_engine \
         [--steps 144] [--out artifacts/bench_engine.json]
@@ -89,24 +93,26 @@ def _bench_eager(model, seq, b0, steps) -> float:
     return n / (time.perf_counter() - t0)
 
 
-def _bench_fused(model, seq, b0, steps, k) -> float:
+def _bench_fused(model, seq, b0, steps, k):
     tr = Trainer(_cfg(model, seq, b0, steps + k), fuse_steps=k)
     loader = PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, seq)
     chunks = loader.iter_chunks(k)
     _, stacked, m0 = next(chunks)              # warmup: compile
     st = tr.state
-    p, o, m = tr.engine.run_chunk(st.params, st.opt_state, 0.0, stacked)
+    p, o, m = tr.engine.run_chunk(st.params, st.opt_state, 0,
+                                  stacked, n_valid=m0)
     jax.block_until_ready(m["loss"])
     t0 = time.perf_counter()
-    n, tokens, pending = 0, float(m0 * seq * b0), []
+    n, tokens, pending = 0, m0 * seq * b0, []
     for _, stacked, mk in chunks:
-        p, o, m = tr.engine.run_chunk(p, o, tokens, stacked)
+        p, o, m = tr.engine.run_chunk(p, o, tokens, stacked,
+                                      n_valid=mk, step=n)
         pending.append(m)                      # deferred transfer
         tokens += mk * seq * b0
         n += mk
     jax.block_until_ready(p)
     jax.device_get(pending)
-    return n / (time.perf_counter() - t0)
+    return n / (time.perf_counter() - t0), len(tr.engine._cache)
 
 
 def _regime(name, model, seq, b0, steps, rows, result):
@@ -117,13 +123,15 @@ def _regime(name, model, seq, b0, steps, rows, result):
            "steps": steps, "eager_steps_per_s": round(sps_eager, 2),
            "fused": {}}
     for k in KS:
-        sps = _bench_fused(model, seq, b0, steps, k)
+        sps, n_exec = _bench_fused(model, seq, b0, steps, k)
         rows.append((f"engine/{name}/fused_k{k}", 1e6 / sps,
                      f"steps_per_s={sps:.1f} "
-                     f"speedup_vs_eager={sps / sps_eager:.2f}x"))
+                     f"speedup_vs_eager={sps / sps_eager:.2f}x "
+                     f"executables={n_exec}"))
         reg["fused"][str(k)] = {
             "steps_per_s": round(sps, 2),
-            "speedup_vs_eager": round(sps / sps_eager, 3)}
+            "speedup_vs_eager": round(sps / sps_eager, 3),
+            "executables": n_exec}
     sps16 = reg["fused"]["16"]["steps_per_s"]
     reg["host_overhead_ms_per_step"] = round(
         1e3 * (1.0 / sps_eager - 1.0 / sps16), 2)
@@ -133,6 +141,37 @@ def _regime(name, model, seq, b0, steps, rows, result):
     result[name] = reg
 
 
+def _compile_counts(rows, result):
+    """Measure the 'one executable per distinct batch size' claim on
+    multi-phase ramps at K=16 with step counts that are NOT multiples
+    of 16 (tail padding in play).  seesaw ramps through 3 batch sizes
+    → 3 programs; 'step' (β=1) has 3 phases but one batch size → its
+    merged chunk stream compiles a single program."""
+    out = {}
+    for kind in ("seesaw", "step"):
+        cfg = RunConfig(
+            model=DISPATCH_LM,
+            schedule=ScheduleConfig(kind=kind, base_lr=1e-3, alpha=2.0,
+                                    n_cuts=2),
+            optimizer=OptimizerConfig(kind="adamw"),
+            seq_len=16, global_batch_size=2,
+            total_tokens=16 * 2 * 52, remat=False)
+        tr = Trainer(cfg, fuse_steps=16)
+        tr.run(PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, 16))
+        out[kind] = {
+            "phases": len(tr.plan.phases),
+            "distinct_batch_sizes": len(set(tr.plan.batch_sizes())),
+            "executables": len(tr.engine._cache),
+            "chunk_ks": sorted({key[2] for key in tr.engine._cache}),
+            "steps": len(tr.history)}
+        rows.append((f"engine/compiles/{kind}",
+                     float(out[kind]["executables"]),
+                     f"distinct_b={out[kind]['distinct_batch_sizes']} "
+                     f"steps={out[kind]['steps']} k16_only="
+                     f"{out[kind]['chunk_ks'] == [16]}"))
+    result["compiles"] = out
+
+
 def _measure(steps: int = 144):
     steps -= steps % 48          # keep divisible by every K in KS
     steps = max(steps, 48)
@@ -140,6 +179,7 @@ def _measure(steps: int = 144):
     _regime("dispatch", DISPATCH_LM, 16, 1, steps, rows, result)
     _regime("smoke150m", SEESAW_150M.reduced(), 16, 1,
             min(steps, 48), rows, result)
+    _compile_counts(rows, result)
     return rows, result
 
 

@@ -9,7 +9,7 @@ the ramp a drop-in.
 from __future__ import annotations
 
 import math
-from typing import Callable, List, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -20,9 +20,11 @@ def cosine_lr(base_lr: float, total_tokens: float, warmup_tokens: float,
     """LR as a function of tokens consumed (paper: η(t)=η₀cos(πt/2T) after
     10% warmup; we use the conventional half-cosine to final_frac and
     also provide the paper's quarter-cosine via ``quarter=True`` in
-    :func:`cosine_cut_points`)."""
+    :func:`cosine_cut_points`).  The curve is continuous, so the
+    optional ``step`` index (used by :func:`piecewise_lr` for exact cut
+    placement) is accepted but ignored."""
 
-    def lr(tok):
+    def lr(tok, step=None):
         tok = jnp.asarray(tok, jnp.float32)
         warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
         prog = jnp.clip((tok - warmup_tokens)
@@ -36,9 +38,10 @@ def cosine_lr(base_lr: float, total_tokens: float, warmup_tokens: float,
 
 def quarter_cosine_lr(base_lr: float, total_tokens: float,
                       warmup_tokens: float) -> Callable[[float], float]:
-    """The paper's Lemma-1 form: η(t) = η₀ cos(π t / 2T) (decays to 0)."""
+    """The paper's Lemma-1 form: η(t) = η₀ cos(π t / 2T) (decays to 0).
+    Continuous — the optional ``step`` index is accepted but ignored."""
 
-    def lr(tok):
+    def lr(tok, step=None):
         tok = jnp.asarray(tok, jnp.float32)
         warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
         prog = jnp.clip((tok - warmup_tokens)
@@ -79,7 +82,7 @@ def step_decay_lr(base_lr: float, cut_tokens: Sequence[float],
     """Step-decay: LR = η₀ α^{-k} after the k-th cut (token-indexed)."""
     cuts = np.asarray(list(cut_tokens), np.float32)
 
-    def lr(tok):
+    def lr(tok, step=None):
         tok = jnp.asarray(tok, jnp.float32)
         k = jnp.sum(tok[..., None] >= cuts, axis=-1) if cuts.size \
             else jnp.zeros_like(tok)
@@ -92,20 +95,41 @@ def step_decay_lr(base_lr: float, cut_tokens: Sequence[float],
 
 def piecewise_lr(base_lr: float, warmup_tokens: float,
                  phase_ends: Sequence[float],
-                 phase_scales: Sequence[float]) -> Callable:
+                 phase_scales: Sequence[float],
+                 phase_end_steps: Optional[Sequence[int]] = None
+                 ) -> Callable:
     """Device-side piecewise-constant LR: the traced form of
     ``SeesawPlan.lr_at``.  ``phase_ends[k]`` is the end-token count of
     phase k; the LR in phase k is ``base_lr * phase_scales[k]``.  The
     lookup is a sum of comparisons against a constant array, so the
     whole schedule lives inside the jitted train step — cosine, step
     and seesaw share one traced code path and no host LR computation
-    happens per step."""
+    happens per step.
+
+    Cut selection comes in two exactness tiers.  The f32 token compare
+    is exact only while token counts stay below 2^24 (one ulp of tok
+    past that, and a cut can land one step early/late).  When
+    ``phase_end_steps`` (the realized cumulative step count per phase)
+    is given and the caller passes the global ``step`` index, the cut
+    is selected by an exact int32 comparison instead; ``tok`` is then
+    only used for the (continuous) warmup ramp, where a 1-ulp error is
+    a ~1e-7 relative LR error, not a misplaced discontinuity.  A
+    negative ``step`` (the engine's sentinel for "unknown") falls back
+    to the token compare."""
     ends = jnp.asarray(np.asarray(phase_ends, np.float32))
     scales = jnp.asarray(np.asarray(phase_scales, np.float32))
+    step_ends = (None if phase_end_steps is None
+                 else jnp.asarray(np.asarray(phase_end_steps, np.int32)))
 
-    def lr(tok):
+    def lr(tok, step=None):
         tok = jnp.asarray(tok, jnp.float32)
-        k = jnp.sum(tok >= ends[:-1])        # ≤ n-1 by construction
+        k_tok = jnp.sum(tok >= ends[:-1])    # ≤ n-1 by construction
+        if step is None or step_ends is None:
+            k = k_tok
+        else:
+            step = jnp.asarray(step, jnp.int32)
+            k = jnp.where(step >= 0,
+                          jnp.sum(step >= step_ends[:-1]), k_tok)
         warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
         return jnp.where(tok < warmup_tokens, warm, base_lr * scales[k])
 
@@ -113,7 +137,7 @@ def piecewise_lr(base_lr: float, warmup_tokens: float,
 
 
 def constant_lr(base_lr: float, warmup_tokens: float = 0.0) -> Callable:
-    def lr(tok):
+    def lr(tok, step=None):
         tok = jnp.asarray(tok, jnp.float32)
         warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
         return jnp.where(tok < warmup_tokens, warm, base_lr)

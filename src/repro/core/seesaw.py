@@ -76,6 +76,26 @@ class SeesawPlan:
     def batch_sizes(self) -> List[int]:
         return [p.batch_size for p in self.phases]
 
+    def merged_segments(self, seq_len: int):
+        """Adjacent same-batch-size phases merged into contiguous
+        segments: ``[(batch_size, [(phase, n_steps), ...]), ...]``.
+
+        Because the device LR is token/step-indexed (not phase-indexed),
+        a fused chunk may legally span a phase boundary as long as the
+        batch size — and therefore the compiled program shape — does not
+        change.  'step' plans (β=1) collapse to a single segment; a
+        clamped ramp (``max_batch_size``) merges its saturated tail.
+        Phases whose realized step count is zero are dropped."""
+        segs: List = []
+        for phase, n in zip(self.phases, self.steps_per_phase(seq_len)):
+            if n <= 0:
+                continue
+            if segs and segs[-1][0] == phase.batch_size:
+                segs[-1][1].append((phase, n))
+            else:
+                segs.append((phase.batch_size, [(phase, n)]))
+        return segs
+
     def phase_at_tokens(self, tok: float) -> Phase:
         for p in self.phases:
             if tok < p.end_tokens:

@@ -1,4 +1,5 @@
 from repro.data.synthetic import LinearRegressionSampler, MarkovLM
-from repro.data.pipeline import PhaseDataLoader
+from repro.data.pipeline import PhaseDataLoader, validate_per_host_plan
 
-__all__ = ["LinearRegressionSampler", "MarkovLM", "PhaseDataLoader"]
+__all__ = ["LinearRegressionSampler", "MarkovLM", "PhaseDataLoader",
+           "validate_per_host_plan"]

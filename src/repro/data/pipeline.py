@@ -7,8 +7,32 @@ partitioning).  Two consumption modes:
 
 - ``__iter__`` — one (phase, step, batch) at a time (legacy eager path
   and generic consumers);
-- ``iter_chunks(k)`` — stacked (K, B, ...) same-phase chunks feeding
-  the engine's K-step fused dispatch.
+- ``iter_chunks(k)`` — stacked (K, B, ...) chunks feeding the engine's
+  K-step fused dispatch.  The chunk stream is *phase-boundary-free*:
+  adjacent phases with the same batch size (β=1 'step' plans, a ramp
+  clamped by ``max_batch_size``) merge into one contiguous segment
+  (the device LR is token/step-indexed, so crossing the boundary
+  mid-chunk is exact), and the tail chunk of every segment is padded
+  up to K by repeating its last step.  Consumers receive ``m`` — the
+  number of *real* leading steps — and must pass it to the engine as
+  ``n_valid``; the padded rows are masked on device.  Net effect: one
+  compiled executable per distinct batch size, no remainder programs.
+
+Two feeding modes:
+
+- default — this process samples and owns the full global batch;
+- ``per_host=True`` — each process samples only its
+  ``jax.process_index()`` shard (a contiguous block of ``B /
+  process_count`` rows per step) and the global (K, B, ...) arrays are
+  assembled from the per-process blocks via
+  ``jax.make_array_from_process_local_data``, which is what makes a
+  real multi-host run feasible (one process can no longer feed the
+  whole ramp).  Row blocks follow mesh device order, the standard
+  layout ``jax.make_mesh`` produces on multi-host.  Pass an explicit
+  ``process_count``/``process_index`` to *simulate* N-host feeding
+  inside one process (mesh-less, host-level arrays only — the
+  equivalence tests concatenate the simulated shards and compare
+  against the single-process stream).
 
 Both modes double-buffer: a daemon thread runs the (Python-loop-heavy)
 synthetic sampling ahead of the consumer through a bounded queue, so
@@ -34,38 +58,86 @@ from repro.data.synthetic import MarkovLM
 _DONE = object()
 
 
+def validate_per_host_plan(plan: SeesawPlan, process_count: int,
+                           n_data_devices: int = 1) -> SeesawPlan:
+    """Check the per-host shard divides evenly across the whole ramp.
+
+    Every phase's global batch must split into ``process_count`` equal
+    per-process blocks, and still shard over all ``n_data_devices``
+    data-parallel devices — a ramp that only divides in its early
+    phases would crash mid-run, so this is validated up front (launch
+    wiring and the dry-run both call it)."""
+    for p in plan.phases:
+        if p.batch_size % max(process_count, 1):
+            raise ValueError(
+                f"phase {p.index}: global batch {p.batch_size} does "
+                f"not divide across {process_count} host processes")
+        if n_data_devices and p.batch_size % n_data_devices:
+            raise ValueError(
+                f"phase {p.index}: global batch {p.batch_size} does "
+                f"not divide across {n_data_devices} data devices")
+    return plan
+
+
 class PhaseDataLoader:
     """Iterates a plan's (phase, step, batch) stream.
 
     The token stream is indexed by absolute sequence number, so a cosine
     run (constant B) and a Seesaw run (ramped B) consume identical
     sequences in identical order at equal token counts — and a resumed
-    run continues the exact stream of the uninterrupted one.
+    run continues the exact stream of the uninterrupted one.  In
+    per-host mode the same invariant holds for the assembled *global*
+    batch: process p contributes rows ``[p*B/N, (p+1)*B/N)`` of every
+    step's global batch, so the concatenation over processes equals the
+    single-process stream row for row.
     """
 
     def __init__(self, source: MarkovLM, plan: SeesawPlan, seq_len: int,
-                 mesh=None, multi_pod: bool = False, prefetch: int = 2):
+                 mesh=None, multi_pod: bool = False, prefetch: int = 2,
+                 per_host: bool = False,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None):
         self.source = source
         self.plan = plan
         self.seq_len = seq_len
         self.mesh = mesh
         self.multi_pod = multi_pod
         self.prefetch = prefetch
+        self.per_host = per_host
+        if per_host:
+            self._pcount = process_count or jax.process_count()
+            self._pidx = (jax.process_index() if process_index is None
+                          else process_index)
+            validate_per_host_plan(plan, self._pcount)
+            if not 0 <= self._pidx < self._pcount:
+                raise ValueError(
+                    f"process_index {self._pidx} outside "
+                    f"[0, {self._pcount})")
+            if mesh is not None and self._pcount != jax.process_count():
+                raise ValueError(
+                    "a simulated process_count only makes sense "
+                    "mesh-less (host-level arrays); with a mesh the "
+                    "process layout comes from the jax runtime")
+        else:
+            self._pcount, self._pidx = 1, 0
         # (phase_idx, steps_done_in_phase, absolute seq cursor)
         self._start: Tuple[int, int, int] = (0, 0, 0)
 
     # -- resume --------------------------------------------------------- #
-    def position_at(self, tokens_seen: float) -> Tuple[int, int, int]:
+    def position_at(self, tokens_seen) -> Tuple[int, int, int]:
         """(phase_idx, steps_done_in_phase, seq_cursor) for a token
-        count that lies on a step boundary of the plan."""
+        count that lies on a step boundary of the plan.  Step
+        boundaries are exact integers, so the arithmetic is integral
+        (a float within 0.5 of a boundary is accepted for backward
+        compatibility with f32-era checkpoints)."""
         steps = self.plan.steps_per_phase(self.seq_len)
-        tok = float(tokens_seen)
+        tok = int(round(float(tokens_seen)))
         cursor = 0
         for pi, (p, n) in enumerate(zip(self.plan.phases, steps)):
             per = p.batch_size * self.seq_len
-            done = int(round(tok / per))
-            if done < n:
-                if abs(done * per - tok) > 0.5:
+            if tok < n * per:
+                done, rem = divmod(tok, per)
+                if rem:
                     raise ValueError(
                         f"tokens_seen={tokens_seen} is not on a step "
                         f"boundary of phase {pi} (B={p.batch_size})")
@@ -74,7 +146,7 @@ class PhaseDataLoader:
             cursor += n * p.batch_size
         return len(steps), 0, cursor
 
-    def resume(self, tokens_seen: float) -> "PhaseDataLoader":
+    def resume(self, tokens_seen) -> "PhaseDataLoader":
         """Reposition the stream to continue a checkpointed run."""
         self._start = self.position_at(tokens_seen)
         return self
@@ -84,46 +156,106 @@ class PhaseDataLoader:
         return ("pod", "data") if self.multi_pod else ("data",)
 
     def _shard(self, batch: Dict[str, np.ndarray], leading_dims: int = 1):
-        """Device-put a host batch; dims before the batch dim (the K
-        chunk dim) replicate, the batch dim shards over the data axes."""
+        """Put a host batch onto devices; dims before the batch dim
+        (the K chunk dim) replicate, the batch dim shards over the data
+        axes.  In per-host mode the local array is this process's row
+        block and the global array is assembled across processes via
+        ``jax.make_array_from_process_local_data``."""
         if self.mesh is None:
             return {k: jnp.asarray(v) for k, v in batch.items()}
         axes = self._batch_axes()
+        bdim = leading_dims - 1
         out = {}
         for k, v in batch.items():
-            spec = P(*([None] * (leading_dims - 1)), axes,
+            spec = P(*([None] * bdim), axes,
                      *([None] * (v.ndim - leading_dims)))
-            out[k] = jax.device_put(v, NamedSharding(self.mesh, spec))
+            sharding = NamedSharding(self.mesh, spec)
+            if self.per_host:
+                gshape = list(v.shape)
+                gshape[bdim] = v.shape[bdim] * self._pcount
+                out[k] = jax.make_array_from_process_local_data(
+                    sharding, v, tuple(gshape))
+            else:
+                out[k] = jax.device_put(v, sharding)
         return out
 
     # -- host-side production ------------------------------------------- #
+    def _local_rows(self, batch_size: int) -> Tuple[int, int]:
+        """(row offset within the step's global batch, rows to sample)
+        for this process — the whole batch outside per-host mode."""
+        bl = batch_size // self._pcount
+        return self._pidx * bl, bl
+
     def _host_steps(self) -> Iterator[Tuple[Any, int, Dict]]:
         steps = self.plan.steps_per_phase(self.seq_len)
         p0, s0, cursor = self._start
         for pi in range(p0, len(self.plan.phases)):
             phase, n = self.plan.phases[pi], steps[pi]
             for s in range(s0 if pi == p0 else 0, n):
-                batch = self.source.sample(cursor, phase.batch_size,
+                off, bl = self._local_rows(phase.batch_size)
+                batch = self.source.sample(cursor + off, bl,
                                            self.seq_len)
                 cursor += phase.batch_size
                 yield phase, s, batch
 
+    def _resume_segments(self):
+        """The plan's merged same-batch-size segments with the resume
+        offset applied (phases before the start dropped, the start
+        phase's already-consumed steps removed)."""
+        p0, s0, _ = self._start
+        segs = []
+        for b, entries in self.plan.merged_segments(self.seq_len):
+            cur = []
+            for phase, n in entries:
+                if phase.index < p0:
+                    continue
+                if phase.index == p0:
+                    n -= s0
+                if n > 0:
+                    cur.append((phase, n))
+            if cur:
+                segs.append((b, cur))
+        return segs
+
+    def _sample_chunk(self, cursor: int, m: int, b: int) -> Dict:
+        """m steps × (this process's rows of) the global batch b,
+        stacked to (m, local_b, ...)."""
+        if self._pcount == 1:
+            raw = self.source.sample(cursor, m * b, self.seq_len)
+            return {key: v.reshape(m, b, *v.shape[1:])
+                    for key, v in raw.items()}
+        off, bl = self._local_rows(b)
+        parts = [self.source.sample(cursor + s * b + off, bl,
+                                    self.seq_len) for s in range(m)]
+        return {key: np.stack([p[key] for p in parts])
+                for key in parts[0]}
+
     def _host_chunks(self, k: int) -> Iterator[Tuple[Any, Dict, int]]:
-        """Same stream, k same-phase steps at a time, sampled in one
-        vectorized call and stacked to (m, B, ...)."""
-        steps = self.plan.steps_per_phase(self.seq_len)
-        p0, s0, cursor = self._start
-        for pi in range(p0, len(self.plan.phases)):
-            phase, n = self.plan.phases[pi], steps[pi]
-            s = s0 if pi == p0 else 0
-            while s < n:
-                m = min(k, n - s)
-                b = phase.batch_size
-                raw = self.source.sample(cursor, m * b, self.seq_len)
-                chunk = {key: v.reshape(m, b, *v.shape[1:])
-                         for key, v in raw.items()}
+        """The merged chunk stream: k steps at a time across each
+        same-batch-size segment, the segment's tail chunk padded up to
+        k by repeating its last step (padding consumes no cursor and is
+        masked on device via ``n_valid``)."""
+        _, _, cursor = self._start
+        for b, entries in self._resume_segments():
+            qi, qoff = 0, 0                 # phase pointer in segment
+            remaining = sum(n for _, n in entries)
+            while remaining:
+                m = min(k, remaining)
+                chunk = self._sample_chunk(cursor, m, b)
+                if m < k:
+                    chunk = {key: np.concatenate(
+                        [v, np.repeat(v[-1:], k - m, axis=0)])
+                        for key, v in chunk.items()}
+                phase = entries[qi][0]      # phase of the chunk's head
+                adv = m
+                while adv:
+                    take = min(adv, entries[qi][1] - qoff)
+                    qoff += take
+                    adv -= take
+                    if qoff == entries[qi][1]:
+                        qi, qoff = qi + 1, 0
                 cursor += m * b
-                s += m
+                remaining -= m
                 yield phase, chunk, m
 
     @staticmethod
@@ -160,8 +292,13 @@ class PhaseDataLoader:
             yield phase, s, self._shard(batch)
 
     def iter_chunks(self, k: int) -> Iterator[Tuple[Any, Dict, int]]:
-        """Yield (phase, stacked sharded chunk of m ≤ k steps, m) for
-        the engine's fused dispatch."""
+        """Yield (phase of the first step, stacked sharded (k, B, ...)
+        chunk, m) for the engine's fused dispatch.  Every chunk has
+        leading dim exactly ``k``; only the first ``m`` steps are real
+        — pass ``m`` to ``PhaseEngine.run_chunk`` as ``n_valid``.  A
+        chunk may span a phase boundary (the merged stream): the batch
+        size is constant within it, but per-step phase attribution must
+        come from the token count, not the head phase tag."""
         gen = self._host_chunks(k)
         if self.prefetch:
             gen = self._prefetched(gen, self.prefetch)

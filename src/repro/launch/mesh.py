@@ -18,6 +18,20 @@ HBM_BW = 819e9                  # B/s
 ICI_BW = 50e9                   # B/s per link
 
 
+def data_parallel_size(mesh) -> int:
+    """Number of data-parallel shards of the global batch: the product
+    of the mesh's 'pod' and 'data' axes (1 when no mesh).  Accepts any
+    duck-typed object exposing a ``.shape`` mapping, so the engine and
+    per-host plan validation share one definition of the data width."""
+    if mesh is None:
+        return 1
+    shape = dict(mesh.shape)
+    n = 1
+    for axis in ("pod", "data"):
+        n *= int(shape.get(axis, 1))
+    return max(n, 1)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -29,6 +29,20 @@ LONG_CONTEXT_ARCHS = {"recurrentgemma-9b", "mamba2-2.7b", "starcoder2-3b"}
 _named = named_shardings        # legacy name used by dryrun and tests
 
 
+def validate_feeding(plan, mesh, *, process_count: int | None = None):
+    """Dry-run/launch check that a plan's batch ramp is feedable on
+    this topology: every phase's global batch must divide across the
+    host processes (per-host data feeding) and across the mesh's
+    data-parallel devices.  Raises ``ValueError`` on the first phase
+    that cannot shard; returns the plan otherwise."""
+    from repro.data.pipeline import validate_per_host_plan
+    from repro.launch.mesh import data_parallel_size
+    n_proc = jax.process_count() if process_count is None \
+        else process_count
+    return validate_per_host_plan(plan, n_proc,
+                                  data_parallel_size(mesh))
+
+
 def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
     if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_ARCHS:
         return False, ("skipped: full-attention arch at 500k decode "

@@ -2,7 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch seesaw-150m \
         --schedule seesaw --steps 200 [--mesh 2x2] [--multipod] \
-        [--fuse-steps 16] [--checkpoint ckpt.npz] [--resume]
+        [--fuse-steps 16] [--checkpoint ckpt.npz] [--resume] \
+        [--per-host]
+
+``--per-host`` turns on multi-host data feeding: each process samples
+only its ``jax.process_index()`` shard of the global batch and the
+global arrays are assembled across processes
+(``jax.make_array_from_process_local_data``); the ramp is validated up
+front so every phase's batch divides over processes and data devices.
 
 On real hardware the mesh comes from the platform; on this container a
 small host-device mesh (--host-devices N) exercises the identical pjit
@@ -43,6 +50,10 @@ def main():
                     help="restore --checkpoint and continue the run")
     ap.add_argument("--fuse-steps", type=int, default=1,
                     help="K batches per fused dispatch (1 = eager)")
+    ap.add_argument("--per-host", action="store_true",
+                    help="each process feeds only its "
+                         "jax.process_index() shard of the global "
+                         "batch (multi-host data feeding)")
     ap.add_argument("--max-device-batch", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -89,8 +100,17 @@ def main():
           f"steps={trainer.plan.total_steps(seq_len)} "
           f"batches={trainer.plan.batch_sizes()} "
           f"fuse_steps={trainer.fuse_steps}")
+    if args.per_host:
+        # fail fast if any phase of the ramp cannot shard over the
+        # processes/devices (not just the phases the run starts in)
+        from repro.launch.steps import validate_feeding
+        validate_feeding(trainer.plan, mesh)
+        print(f"per-host feeding: process {jax.process_index()}"
+              f"/{jax.process_count()}, local batch shards "
+              f"{[b // jax.process_count() for b in trainer.plan.batch_sizes()]}")
     src = MarkovLM(vocab_size=min(model.vocab_size, 2048), seed=args.seed)
-    loader = PhaseDataLoader(src, trainer.plan, seq_len, mesh=mesh)
+    loader = PhaseDataLoader(src, trainer.plan, seq_len, mesh=mesh,
+                             per_host=args.per_host)
     if args.resume:
         assert args.checkpoint, "--resume needs --checkpoint"
         meta = trainer.restore_checkpoint(args.checkpoint)

@@ -56,8 +56,6 @@ def attention_specs(fsdp, lead: Tuple = ()) -> Params:
 
 def _mask(qpos, kpos, *, causal: bool, window: Optional[int], kv_len=None):
     """(..., Sq, Sk) boolean mask from absolute positions."""
-    m = jnp.ones(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]),
-                 dtype=bool) if False else None
     q = qpos[..., :, None]
     k = kpos[..., None, :]
     m = k >= 0

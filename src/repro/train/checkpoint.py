@@ -6,7 +6,12 @@ position (phase index, batch size, schedule kind) next to
 ``tokens_seen``; ``restore_phase_checkpoint`` validates that the
 restoring run's plan lands the same token count in the same phase, so
 the engine resumes with the correct compiled step (batch size) and the
-device-side LR curve picks up exactly where it left off."""
+device-side LR curve picks up exactly where it left off.
+
+``tokens_seen`` round-trips losslessly: the trainer passes an exact
+Python int and JSON preserves arbitrary-precision integers, so a
+resumed run continues from the exact token count however long the run
+(pre-integer float checkpoints still restore — the trainer rounds)."""
 from __future__ import annotations
 
 import json

@@ -15,14 +15,16 @@ the repo.  The engine owns four layers:
    step/seesaw/constant (piecewise) share one code path inside the
    jitted step; no host LR computation happens per step.
 3. ``make_fused_step`` — K-step fused dispatch: ``lax.scan`` over a
-   stacked chunk of K batches per host round-trip.  Metrics come back
-   stacked ``(K,)`` on device and are only transferred at ``log_every``
+   stacked chunk of K batches per host round-trip.  The carry is an
+   exact int32 step counter (the host keeps ``tokens_seen`` as a
+   Python int), ``n_valid`` masks the padded tail of a short chunk so
+   one executable serves every chunk of a batch size, and metrics come
+   back stacked ``(K,)`` on device, only transferred at ``log_every``
    boundaries (the caller decides when to ``device_get``).
 4. ``PhaseEngine`` — per-(batch_size, micro, K) compile cache of
-   donated, ``NamedSharding``-annotated jitted steps.  A phase change
-   (new global batch) is one retrace; K=1 is the eager path and runs
-   through the identical scan body, so fused and eager trajectories
-   match bitwise.
+   donated, ``NamedSharding``-annotated jitted steps.  A batch-size
+   change is one retrace; K=1 is the eager path and runs through the
+   identical scan body, so fused and eager trajectories match bitwise.
 
 Sharding-tree helpers (``param_structs`` / ``opt_structs`` /
 ``opt_state_specs`` / ``named_shardings``) live here too and are
@@ -34,7 +36,6 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -134,27 +135,36 @@ def make_grad_step(cfg: ModelConfig, optimizer: O.Optimizer, *,
 
 def plan_lr_fn(plan: SeesawPlan,
                seq_len: Optional[int] = None) -> Callable:
-    """The plan's LR curve as a traced function of tokens_seen.  Cosine
-    plans get the continuous quarter-cosine (Lemma 1); every piecewise
-    kind gets :func:`schedules.piecewise_lr` over the phase table.
+    """The plan's LR curve as a traced function ``lr(tokens_seen,
+    step=None)``.  Cosine plans get the continuous quarter-cosine
+    (Lemma 1); every piecewise kind gets :func:`schedules.piecewise_lr`
+    over the phase table.
 
     With ``seq_len`` the cut thresholds are the *realized* phase starts
     (step-quantized via ``steps_per_phase``), not the ideal token cut
     points — the loader switches batch size on step boundaries, and the
     LR cut must land on the same step so each step trains with its
-    phase's (lr, batch) pair."""
+    phase's (lr, batch) pair.  The realized ends are accumulated in
+    exact integer arithmetic and the cumulative *step* boundaries are
+    handed to ``piecewise_lr`` too, so a jitted step that knows its
+    global step index selects the cut by exact int32 compare (immune to
+    f32 rounding past 2^24 tokens)."""
     if plan.kind == "cosine":
         return S.quarter_cosine_lr(plan.base_lr, plan.total_tokens,
                                    plan.warmup_tokens)
     if seq_len:
-        ends, tok = [], 0.0
+        ends, step_ends, tok, n_cum = [], [], 0, 0
         for p, n in zip(plan.phases, plan.steps_per_phase(seq_len)):
             tok += n * p.batch_size * seq_len
+            n_cum += n
             ends.append(tok)
+            step_ends.append(n_cum)
     else:
         ends = [p.end_tokens for p in plan.phases]
+        step_ends = None
     return S.piecewise_lr(plan.base_lr, plan.warmup_tokens, ends,
-                          [p.lr_scale for p in plan.phases])
+                          [p.lr_scale for p in plan.phases],
+                          phase_end_steps=step_ends)
 
 
 # --------------------------------------------------------------------- #
@@ -164,27 +174,86 @@ def plan_lr_fn(plan: SeesawPlan,
 def make_fused_step(grad_step: Callable, lr_fn: Callable,
                     tokens_per_step: float) -> Callable:
     """Wrap a grad step into ``fused(params, opt_state, tokens_seen,
-    batches)`` where ``batches`` has a leading K dim.  One host dispatch
-    covers K optimizer steps; the LR is evaluated on device from the
-    running token count; metrics (plus the per-step ``lr``) return
-    stacked ``(K,)``."""
-    tps = jnp.float32(tokens_per_step)
+    step0, n_valid, batches)`` where ``batches`` has a leading K dim.
+    One host dispatch covers up to K optimizer steps; metrics (plus the
+    per-step ``lr``) return stacked ``(K,)``.
 
-    def fused(params, opt_state, tokens_seen, batches):
+    The scan carry is an exact int32 step counter, not an f32 token
+    accumulator: step i's token count is ``tokens_seen + i *
+    tokens_per_step`` with the offset computed in int32 (exact for any
+    chunk under 2^31 tokens; the old ``tok + tps`` f32 carry drifted
+    once a chunk crossed 2^24 tokens).  The exact running total lives
+    on the host as a Python int; ``tokens_seen`` arrives here already
+    rounded once to f32, and the device LR receives the global step
+    index ``step0 + i`` so piecewise cuts are selected by integer
+    compare (see :func:`plan_lr_fn`).
+
+    ``n_valid`` masks the tail of a padded chunk: steps with
+    ``i >= n_valid`` take a ``lax.cond`` branch that returns params and
+    opt state untouched (and zero metrics), so a merged chunk stream
+    can pad every tail chunk up to K and reuse the single compiled
+    executable — no remainder programs — without perturbing training.
+    ``n_valid`` is a traced scalar, so varying it never recompiles."""
+    tps = jnp.int32(int(tokens_per_step))
+    takes_step = _takes_step(lr_fn)
+
+    def fused(params, opt_state, tokens_seen, step0, n_valid, batches):
+        def real(operand):
+            params, opt_state, batch, lr = operand
+            p, o, m = grad_step(params, opt_state, batch, lr)
+            return p, o, dict(m, lr=jnp.asarray(lr, jnp.float32))
+
+        # metrics pytree structure for the skip branch, from one
+        # abstract eval of the real step (scan traces the body once,
+        # so this costs a single extra abstract pass per compile)
+        m_struct = jax.eval_shape(
+            real, (params, opt_state,
+                   jax.tree.map(lambda x: x[0], batches),
+                   jnp.float32(0)))[2]
+
         def body(carry, batch):
-            params, opt_state, tok = carry
-            lr = lr_fn(tok)
-            params, opt_state, metrics = grad_step(params, opt_state,
-                                                   batch, lr)
-            metrics["lr"] = jnp.asarray(lr, jnp.float32)
-            return (params, opt_state, tok + tps), metrics
+            params, opt_state, i = carry
+            tok = (jnp.asarray(tokens_seen, jnp.float32)
+                   + (i * tps).astype(jnp.float32))
+            # a negative step0 means "step index unknown": keep the
+            # sentinel for EVERY step of the chunk (step0 + i would
+            # turn non-negative from i=1 on and silently select the
+            # wrong piecewise phase)
+            stepi = jnp.where(step0 < 0, jnp.int32(-1), step0 + i)
+            lr = lr_fn(tok, stepi) if takes_step else lr_fn(tok)
+            operand = (params, opt_state, batch, lr)
 
-        carry = (params, opt_state, jnp.asarray(tokens_seen, jnp.float32))
+            def skip(operand):
+                params, opt_state, _, _ = operand
+                zeros = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), m_struct)
+                return params, opt_state, zeros
+
+            params, opt_state, metrics = jax.lax.cond(
+                i < n_valid, real, skip, operand)
+            return (params, opt_state, i + jnp.int32(1)), metrics
+
+        carry = (params, opt_state, jnp.int32(0))
         (params, opt_state, _), metrics = jax.lax.scan(body, carry,
                                                        batches)
         return params, opt_state, metrics
 
     return fused
+
+
+def _takes_step(lr_fn: Callable) -> bool:
+    """Whether ``lr_fn`` accepts the global step index as a second
+    argument (every :mod:`repro.core.schedules` curve does; ad-hoc
+    token-only callables keep working)."""
+    try:
+        import inspect
+        sig = inspect.signature(lr_fn)
+    except (TypeError, ValueError):
+        return False
+    if len(sig.parameters) >= 2:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_POSITIONAL
+               for p in sig.parameters.values())
 
 
 # --------------------------------------------------------------------- #
@@ -196,8 +265,10 @@ class PhaseEngine:
 
     Keys are ``(batch_size, micro_batches, K)``; each entry is one
     donated jitted fused step, sharding-annotated when a mesh is given.
-    The batch ramp walks batch sizes, so a P-phase plan compiles at
-    most P (+1 for a remainder chunk size) programs.
+    The batch ramp walks batch sizes, so a plan fed by the loader's
+    merged, tail-padded chunk stream compiles exactly one program per
+    *distinct* batch size — remainder chunks reuse the K-sized program
+    with ``n_valid`` masking the padded tail.
     """
 
     def __init__(self, cfg: RunConfig, optimizer: O.Optimizer,
@@ -216,10 +287,8 @@ class PhaseEngine:
 
     # -- mesh geometry -------------------------------------------------- #
     def n_data_devices(self) -> int:
-        if self.mesh is None:
-            return 1
-        return int(np.prod([self.mesh.shape[a] for a in ("pod", "data")
-                            if a in self.mesh.shape])) or 1
+        from repro.launch.mesh import data_parallel_size
+        return data_parallel_size(self.mesh)
 
     def micro_batches(self, batch_size: int) -> int:
         """Accumulation count for a global batch.  The microbatch is a
@@ -241,8 +310,15 @@ class PhaseEngine:
     def _batch_axes(self):
         return ("pod", "data") if self.multi_pod else ("data",)
 
-    def _in_shardings(self, stacked_batch):
-        """(params, opt_state, tokens, batches) NamedShardings."""
+    def _shardings(self, stacked_batch):
+        """(in_shardings, out_shardings) for the fused step.  Inputs:
+        (params, opt_state, tokens, step0, n_valid, batches) with the
+        three control scalars replicated.  Outputs pin params/opt state
+        to the same specs as the inputs — without the constraint XLA
+        is free to return a donated output with whatever sharding
+        propagation inferred, and the *next* compiled program (a new
+        batch size in the ramp) would then reject the arg as
+        mismatched mid-run."""
         pspec = R.param_specs(self.cfg.model, self.multi_pod)
         pstruct = param_structs(self.cfg.model)
         ostruct = jax.eval_shape(self.optimizer.init, pstruct)
@@ -254,8 +330,12 @@ class PhaseEngine:
             return P(None, axes, *([None] * (x.ndim - 2)))
 
         bspecs = jax.tree.map(bspec, stacked_batch)
-        return named_shardings(self.mesh,
-                               (pspec, ospec, P(), bspecs))
+        in_sh = named_shardings(
+            self.mesh, (pspec, ospec, P(), P(), P(), bspecs))
+        out_sh = (named_shardings(self.mesh, pspec),
+                  named_shardings(self.mesh, ospec),
+                  NamedSharding(self.mesh, P()))     # stacked metrics
+        return in_sh, out_sh
 
     # -- compile cache -------------------------------------------------- #
     def compiled_step(self, batch_size: int, k: int,
@@ -273,19 +353,37 @@ class PhaseEngine:
                                     batch_size * self.cfg.seq_len)
             kw = {}
             if self.mesh is not None and stacked_batch is not None:
-                kw["in_shardings"] = self._in_shardings(stacked_batch)
+                kw["in_shardings"], kw["out_shardings"] = \
+                    self._shardings(stacked_batch)
             self._cache[key] = jax.jit(fused, donate_argnums=(0, 1),
                                        **kw)
         return self._cache[key]
 
     # -- dispatch ------------------------------------------------------- #
-    def run_chunk(self, params, opt_state, tokens_seen: float,
-                  stacked_batch):
-        """One host round-trip: K fused optimizer steps.  Returns
+    def run_chunk(self, params, opt_state, tokens_seen,
+                  stacked_batch, n_valid: Optional[int] = None,
+                  step: Optional[int] = None):
+        """One host round-trip: up to K fused optimizer steps.  Returns
         (params, opt_state, stacked device metrics) without forcing a
-        transfer — the caller flushes metrics at log boundaries."""
+        transfer — the caller flushes metrics at log boundaries.
+
+        ``tokens_seen`` is the host's exact integer token count (a
+        float on a step boundary also works); it is rounded once to
+        f32 here.  ``n_valid`` (default: all K) is the number of
+        leading real steps in a tail-padded chunk — metric rows past it
+        are zeros and must be discarded.  ``step`` is the global step
+        index of the chunk's first step; when given, piecewise LR cuts
+        are selected by exact integer compare on device."""
         leaves = jax.tree.leaves(stacked_batch)
         k, batch_size = leaves[0].shape[0], leaves[0].shape[1]
+        if n_valid is None:
+            n_valid = k
+        if k * batch_size * self.cfg.seq_len >= 2 ** 31:
+            raise ValueError(
+                f"chunk of {k}x{batch_size}x{self.cfg.seq_len} tokens "
+                f"overflows the int32 on-device token offset — lower "
+                f"fuse_steps")
         fn = self.compiled_step(batch_size, k, stacked_batch)
-        return fn(params, opt_state, jnp.float32(tokens_seen),
-                  stacked_batch)
+        return fn(params, opt_state, jnp.float32(float(tokens_seen)),
+                  jnp.int32(-1 if step is None else int(step)),
+                  jnp.int32(int(n_valid)), stacked_batch)

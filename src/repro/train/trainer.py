@@ -12,6 +12,10 @@ K steps are fused into one dispatch (``fuse_steps``), and metrics stay
 on device until a ``log_every`` boundary forces a transfer.  Gradient
 accumulation (phase batch > ``max_device_batch``) is a ``lax.scan``
 over microbatches, so the ramp changes a trip count, not the trace.
+The loader's chunk stream is merged across same-batch-size phases and
+tail-padded to ``fuse_steps``, so a whole run compiles exactly one
+fused program per distinct batch size; ``tokens_seen`` is carried as
+an exact integer on the host.
 """
 from __future__ import annotations
 
@@ -37,7 +41,10 @@ class TrainState:
     params: Params
     opt_state: Params
     step: int = 0
-    tokens_seen: float = 0.0
+    # exact integer token count — the host is the source of truth; the
+    # device only ever sees a once-rounded f32 base plus an int32
+    # per-chunk offset, so the carry never drifts however long the run
+    tokens_seen: int = 0
 
 
 def make_train_step(cfg: RunConfig, optimizer: O.Optimizer, *,
@@ -109,15 +116,20 @@ class Trainer:
             seq_len=self.cfg.seq_len)
         self.state.params, self.state.opt_state = p, s
         self.state.step = int(meta["step"])
-        self.state.tokens_seen = float(meta["tokens_seen"])
+        self.state.tokens_seen = int(round(float(meta["tokens_seen"])))
         return meta
 
     # -- fused run loop ------------------------------------------------- #
     def _chunks(self, loader, max_steps):
-        """Yield (phase, stacked_batches, k): chunks of ≤ fuse_steps
-        same-phase batches.  Uses the loader's double-buffered
-        ``iter_chunks`` when available; any plain (phase, step, batch)
-        iterator works as a fallback (chunked by stacking on device)."""
+        """Yield (head phase, stacked_batches, n): chunks with ≤
+        fuse_steps real steps.  Uses the loader's double-buffered
+        ``iter_chunks`` when available — those chunks always have
+        leading dim fuse_steps (merged across same-batch-size phases,
+        tail-padded), so truncating to a ``max_steps`` budget just
+        lowers ``n`` (the engine masks the tail via ``n_valid``) and
+        never creates a new chunk shape to compile.  Any plain (phase,
+        step, batch) iterator works as a fallback (chunked by stacking
+        on device, breaking at phase boundaries)."""
         k = self.fuse_steps
         st = self.state
 
@@ -130,7 +142,6 @@ class Trainer:
                 if r is not None and r <= 0:
                     return
                 if r is not None and n > r:
-                    stacked = jax.tree.map(lambda x: x[:r], stacked)
                     n = r
                 yield phase, stacked, n
             return
@@ -157,17 +168,25 @@ class Trainer:
                        len(buf))
 
     def _flush(self, pending, log_cb):
-        """Device→host metric transfer, deferred to log boundaries."""
+        """Device→host metric transfer, deferred to log boundaries.
+        A merged chunk can span a phase boundary (same batch size,
+        different LR scale), so each step's phase is attributed from
+        its token count, not the chunk's head phase.  Metric rows past
+        a chunk's ``n`` real steps are device-side padding and are
+        never read."""
         le = max(self.cfg.log_every, 1)
-        for base_step, base_tok, phase, wall, metrics, k in pending:
+        for base_step, base_tok, phase, wall, metrics, n in pending:
             host = jax.device_get(metrics)
             tok_per_step = phase.batch_size * self.cfg.seq_len
-            for i in range(k):
+            for i in range(n):
+                tok_start = base_tok + i * tok_per_step
+                ph = self.plan.realized_phase_at(tok_start,
+                                                 self.cfg.seq_len)
                 rec = {"step": base_step + i + 1,
                        "tokens": base_tok + (i + 1) * tok_per_step,
                        "lr": float(host["lr"][i]),
                        "batch_size": phase.batch_size,
-                       "phase": phase.index,
+                       "phase": ph.index,
                        "loss": float(host["loss"][i]),
                        "wall": wall}
                 for name, v in host.items():
@@ -184,15 +203,16 @@ class Trainer:
         t0 = time.time()
         le = max(self.cfg.log_every, 1)
         pending: List[Tuple] = []
-        for phase, stacked, k in self._chunks(loader, max_steps):
+        for phase, stacked, n in self._chunks(loader, max_steps):
             params, opt_state, metrics = self.engine.run_chunk(
-                st.params, st.opt_state, st.tokens_seen, stacked)
+                st.params, st.opt_state, st.tokens_seen, stacked,
+                n_valid=n, step=st.step)
             base_step, base_tok = st.step, st.tokens_seen
             st.params, st.opt_state = params, opt_state
-            st.step += k
-            st.tokens_seen += k * phase.batch_size * self.cfg.seq_len
+            st.step += n
+            st.tokens_seen += n * phase.batch_size * self.cfg.seq_len
             pending.append((base_step, base_tok, phase,
-                            time.time() - t0, metrics, k))
+                            time.time() - t0, metrics, n))
             if st.step // le > base_step // le:
                 self._flush(pending, log_cb)
         self._flush(pending, log_cb)

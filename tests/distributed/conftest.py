@@ -1,0 +1,40 @@
+"""Shared subprocess runner for the multi-device / multi-process
+equivalence harness.
+
+Every test here runs its jax world in a fresh subprocess so the main
+pytest process keeps its 1-CPU-device world.  The runner pins
+``JAX_PLATFORMS=cpu`` (without the pin, jax probes for a TPU backend
+for ~5 minutes per subprocess on this image before falling back) and
+forces an N-device host platform via
+``--xla_force_host_platform_device_count`` — both set in the
+environment *before* the subprocess imports jax, so test scripts need
+no device boilerplate.  Scripts report by printing one JSON object as
+their last stdout line.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+@pytest.fixture
+def run_subprocess():
+    def run(script: str, *argv, devices: int = 8, timeout: int = 420):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}")
+        out = subprocess.run(
+            [sys.executable, "-c", script, *map(str, argv)],
+            capture_output=True, text=True, env=env, timeout=timeout)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    return run

@@ -1,0 +1,89 @@
+"""The tentpole acceptance test: on a forced-8-device CPU mesh, a plan
+with adjacent same-batch-size phases runs fused K=16 through the merged
+chunk stream with exactly one compiled executable per *distinct* batch
+size (no remainder programs), and the fused params are bitwise
+identical to the per-phase eager (K=1) reference at equal tokens.
+
+float32 activations throughout: bf16 + AdamW amplify cross-device
+reduction-order noise to O(1e-3) in ~20 steps, which would mask a real
+divergence (and break a bitwise assertion) — see tests/distributed
+conftest for the environment pins.
+"""
+import pytest
+
+pytestmark = [pytest.mark.slow, pytest.mark.subprocess]
+
+SCRIPT = r"""
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.launch.mesh import make_test_mesh
+from repro.train.trainer import Trainer
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                   d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                   d_ff=128, vocab_size=128, max_seq_len=64,
+                   rope_theta=1e4)
+
+# naive-ramp clamped at 16: batch sizes 8, 16, 16, 16 — the three
+# saturated phases merge into one chunk stream, and phase step counts
+# are not multiples of K=16, so tail padding is exercised too.
+cfg = RunConfig(
+    model=TINY,
+    schedule=ScheduleConfig(kind="naive-ramp", base_lr=1e-3, alpha=2.0,
+                            beta=2.0, n_cuts=3, max_batch_size=16),
+    optimizer=OptimizerConfig(kind="adamw"),
+    seq_len=32, global_batch_size=8, total_tokens=32 * 8 * 60,
+    remat=False, dtype="float32")
+
+mesh = make_test_mesh(4, 2)          # data=4 x model=2 on 8 devices
+
+
+def run(k):
+    tr = Trainer(cfg, mesh=mesh, fuse_steps=k)
+    loader = PhaseDataLoader(MarkovLM(128, seed=0), tr.plan, 32,
+                             mesh=mesh)
+    tr.run(loader)
+    return tr
+
+
+eager = run(1)
+fused = run(16)
+e_params = jax.device_get(eager.state.params)
+f_params = jax.device_get(fused.state.params)
+bitwise = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(jax.tree.leaves(e_params),
+                              jax.tree.leaves(f_params)))
+hist = all(a["lr"] == b["lr"] and a["phase"] == b["phase"]
+           and a["tokens"] == b["tokens"]
+           and a["batch_size"] == b["batch_size"]
+           for a, b in zip(eager.history, fused.history))
+print(json.dumps({
+    "bitwise": bitwise,
+    "hist_equal": hist and len(eager.history) == len(fused.history),
+    "executables": len(fused._step_cache),
+    "chunk_ks": sorted({key[2] for key in fused._step_cache}),
+    "distinct_batch_sizes": len(set(fused.plan.batch_sizes())),
+    "steps": len(fused.history),
+    "plan_steps": fused.plan.total_steps(32),
+    "tokens": fused.state.tokens_seen,
+    "eager_tokens": eager.state.tokens_seen,
+    "n_devices": jax.device_count(),
+}))
+"""
+
+
+def test_merged_stream_fused_bitwise_vs_eager_on_mesh(run_subprocess):
+    rec = run_subprocess(SCRIPT, devices=8, timeout=420)
+    assert rec["n_devices"] == 8
+    assert rec["bitwise"], rec
+    assert rec["hist_equal"], rec
+    # exactly one fused executable per distinct batch size, all at K=16
+    assert rec["executables"] == rec["distinct_batch_sizes"] == 2, rec
+    assert rec["chunk_ks"] == [16], rec
+    # carry conservation at equal tokens
+    assert rec["steps"] == rec["plan_steps"]
+    assert rec["tokens"] == rec["eager_tokens"]

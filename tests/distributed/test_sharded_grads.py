@@ -1,18 +1,12 @@
 """Distributed numerical correctness: the pjit-sharded loss/grads on an
-8-device host mesh equal the single-device computation — run in a
-subprocess so the main process keeps its 1-device world."""
-import json
-import os
-import subprocess
-import sys
-
+8-device host mesh equal the single-device computation — run through
+the shared subprocess runner (JAX_PLATFORMS=cpu pinned; without the pin
+each subprocess stalls ~5 min probing for a TPU backend)."""
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+pytestmark = [pytest.mark.slow, pytest.mark.subprocess]
 
 SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax, jax.numpy as jnp
 import numpy as np
@@ -53,20 +47,10 @@ print(json.dumps({"loss_err": err_loss, "grad_err": gerr,
 """
 
 
-def _run(arch):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
-    out = subprocess.run([sys.executable, "-c", SCRIPT, arch],
-                         capture_output=True, text=True, env=env,
-                         timeout=420)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
 @pytest.mark.parametrize("arch", ["llama3.2-3b", "granite-moe-1b-a400m",
                                   "mamba2-2.7b"])
-def test_sharded_loss_and_grads_match_single_device(arch):
-    rec = _run(arch)
+def test_sharded_loss_and_grads_match_single_device(arch,
+                                                    run_subprocess):
+    rec = run_subprocess(SCRIPT, arch, devices=8)
     assert rec["loss_err"] < 1e-4, rec
     assert rec["grad_err"] < 5e-3, rec

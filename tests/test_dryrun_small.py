@@ -46,7 +46,9 @@ print(json.dumps({"ok": True, "flops": float(ca.get("flops", -1))}))
 def _run(arch, mode, multipod=False):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # forced host devices are a CPU feature; without the pin jax
+    # probes for a TPU backend ~5 min per subprocess on this image
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT, arch, mode, "1" if multipod else "0"],
         capture_output=True, text=True, env=env, timeout=420)

@@ -152,7 +152,9 @@ class TestMicroBatchGeometry:
 class TestChunkedLoader:
     def test_chunks_equal_step_stream(self):
         """iter_chunks(k) is a reshape of the per-step stream — same
-        sequences, same order, same sharded values."""
+        sequences, same order, same sharded values.  Every chunk has
+        leading dim exactly k (tail chunks are padded and report m < k
+        real steps); only the m real steps belong to the stream."""
         plan = Trainer(_cfg()).plan
         l1 = PhaseDataLoader(MarkovLM(128, seed=0), plan, 32)
         l2 = PhaseDataLoader(MarkovLM(128, seed=0), plan, 32)
@@ -160,7 +162,7 @@ class TestChunkedLoader:
         chunked = []
         for phase, chunk, m in l2.iter_chunks(4):
             arr = np.asarray(chunk["tokens"])
-            assert arr.shape[0] == m
+            assert arr.shape[0] == 4 and 1 <= m <= 4
             chunked.extend(arr[i] for i in range(m))
         assert len(flat) == len(chunked)
         for a, b in zip(flat, chunked):
@@ -183,6 +185,133 @@ class TestChunkedLoader:
         loader = PhaseDataLoader(MarkovLM(128, seed=0), plan, 32)
         with pytest.raises(ValueError):
             loader.resume(17.0)
+
+
+class TestMergedChunkStream:
+    def test_step_plan_single_executable_bitwise(self):
+        """'step' plans (β=1) keep one batch size, so every phase
+        merges into one contiguous chunk stream: 40 steps at K=16 run
+        as chunks of 16/16/8-padded through ONE compiled program, and
+        params stay bitwise equal to the eager per-step reference."""
+        eager = _run(kind="step", fuse_steps=1)
+        fused = _run(kind="step", fuse_steps=16)
+        for a, b in zip(jax.tree.leaves(eager.state.params),
+                        jax.tree.leaves(fused.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert len(fused._step_cache) == 1
+        assert [key[2] for key in fused._step_cache] == [16]
+        # per-step phase/LR attribution is exact across the merged
+        # boundaries a chunk may straddle
+        assert ([h["phase"] for h in eager.history]
+                == [h["phase"] for h in fused.history])
+        assert ([h["lr"] for h in eager.history]
+                == [h["lr"] for h in fused.history])
+
+    def test_tail_padding_conserves_steps_and_tokens(self):
+        """Phase step counts that are not multiples of K: padding must
+        neither drop nor duplicate steps, and the integer token carry
+        must land exactly on the plan's scheduled total."""
+        tr = _run(kind="seesaw", fuse_steps=16)
+        assert len(tr.history) == tr.plan.total_steps(32)
+        assert isinstance(tr.state.tokens_seen, int)
+        assert tr.state.tokens_seen == int(
+            tr.plan.total_tokens_scheduled(32))
+        toks = [h["tokens"] for h in tr.history]
+        assert toks[-1] == tr.state.tokens_seen
+        assert all(b > a for a, b in zip(toks, toks[1:]))
+
+    def test_merged_segments_structure(self):
+        plan = Trainer(_cfg(kind="step")).plan
+        segs = plan.merged_segments(32)
+        assert len(segs) == 1                # β=1: one segment
+        _, entries = segs[0]
+        assert sum(n for _, n in entries) == plan.total_steps(32)
+        assert len(entries) == len(plan.phases)
+        plan2 = Trainer(_cfg(kind="seesaw")).plan
+        assert len(plan2.merged_segments(32)) == len(plan2.phases)
+
+    def test_max_steps_budget_reuses_padded_executable(self):
+        """A max_steps budget lowers n_valid on the padded chunk
+        instead of slicing it, so truncation never compiles a new
+        program shape."""
+        tr = Trainer(_cfg(kind="step"), fuse_steps=16)
+        tr.run(PhaseDataLoader(MarkovLM(128, seed=0), tr.plan, 32),
+               max_steps=5)
+        assert len(tr.history) == 5
+        assert {key[2] for key in tr._step_cache} == {16}
+
+
+class TestExactTokenCarry:
+    def test_lr_cut_exact_beyond_2p24_tokens_per_chunk(self):
+        """Regression for the old f32 token carry: with tokens_per_step
+        an odd number > 2^23, a 6-step chunk spans > 2^24 tokens and
+        the step-3 cut sits at an odd token count f32 cannot represent
+        — an f32 accumulator drifts and can land the cut a step off.
+        The int32 step carry + step-indexed cut selection place it
+        exactly."""
+        tps = 2 ** 23 + 1
+        k = 6
+        ends = [3 * tps, 6 * tps]
+        lr_fn = S.piecewise_lr(1.0, 0.0, ends, [1.0, 0.5],
+                               phase_end_steps=[3, 6])
+
+        def stub(params, opt_state, batch, lr):
+            return params + lr, opt_state, {"loss": jnp.float32(0.0)}
+
+        fused = E.make_fused_step(stub, lr_fn, tps)
+        batches = jnp.zeros((k, 1), jnp.float32)
+        _, _, m = jax.jit(fused)(jnp.float32(0.0), jnp.float32(0.0),
+                                 jnp.float32(0.0), jnp.int32(0),
+                                 jnp.int32(k), batches)
+        np.testing.assert_array_equal(
+            np.asarray(m["lr"]),
+            np.asarray([1.0, 1.0, 1.0, 0.5, 0.5, 0.5], np.float32))
+
+    def test_n_valid_masks_padded_tail(self):
+        """Steps at i >= n_valid leave params and opt state untouched
+        (bitwise) and report zeroed metrics."""
+        lr_fn = S.constant_lr(0.5)
+
+        def stub(params, opt_state, batch, lr):
+            return params + lr, opt_state + 1, {"loss": jnp.float32(1.0)}
+
+        fused = E.make_fused_step(stub, lr_fn, 128)
+        batches = jnp.zeros((4, 1), jnp.float32)
+        p, o, m = jax.jit(fused)(jnp.float32(0.0), jnp.float32(0.0),
+                                 jnp.float32(0.0), jnp.int32(0),
+                                 jnp.int32(2), batches)
+        assert float(p) == pytest.approx(1.0)      # 2 × lr=0.5
+        assert float(o) == 2.0
+        np.testing.assert_array_equal(
+            np.asarray(m["loss"]), [1.0, 1.0, 0.0, 0.0])
+
+    def test_unknown_step_sentinel_covers_whole_chunk(self):
+        """A caller without a global step index (step0 = -1) must get
+        the token-compare fallback for EVERY step of the chunk — a
+        naive ``step0 + i`` turns non-negative from i=1 on and would
+        silently select phase 0's LR mid-plan."""
+        tps = 64
+        lr_fn = S.piecewise_lr(1.0, 0.0, [192, 384], [1.0, 0.5],
+                               phase_end_steps=[3, 6])
+
+        def stub(params, opt_state, batch, lr):
+            return params, opt_state, {"loss": jnp.float32(0.0)}
+
+        fused = E.make_fused_step(stub, lr_fn, tps)
+        batches = jnp.zeros((4, 1), jnp.float32)
+        # resume mid-run at token 192 = start of phase 1, step unknown
+        _, _, m = jax.jit(fused)(jnp.float32(0.0), jnp.float32(0.0),
+                                 jnp.float32(192.0), jnp.int32(-1),
+                                 jnp.int32(4), batches)
+        np.testing.assert_array_equal(np.asarray(m["lr"]),
+                                      np.full(4, 0.5, np.float32))
+
+    def test_run_chunk_rejects_int32_token_overflow(self):
+        tr = Trainer(_cfg())
+        huge = {"tokens": jax.ShapeDtypeStruct((2 ** 16, 2 ** 11, 32),
+                                               jnp.int32)}
+        with pytest.raises(ValueError, match="int32"):
+            tr.engine.run_chunk(None, None, 0, huge)
 
 
 class TestPhaseCheckpoint:
@@ -246,6 +375,44 @@ class TestPhaseCheckpoint:
         tr2.run(loader, max_steps=steps0 + 1)
         assert tr2.history[-1]["phase"] == 1
         assert tr2.history[-1]["batch_size"] == meta["batch_size"]
+
+    def test_roundtrip_across_merged_boundary_fused(self, tmp_path):
+        """Save mid-run inside a *merged* segment (a 'step' plan whose
+        phases all share one batch size), resume with fused K=16: the
+        resumed trajectory continues the uninterrupted run bitwise —
+        even though the resumed run's chunk boundaries differ — and
+        the resumed engine still compiles a single K=16 program."""
+        cfg = _cfg(kind="step")
+        src = MarkovLM(128, seed=0)
+        full = Trainer(cfg, fuse_steps=16)
+        full.run(PhaseDataLoader(src, full.plan, 32))
+
+        steps0 = full.plan.steps_per_phase(32)[0]
+        mid = steps0 + 1                     # one step into phase 1
+        tr_a = Trainer(cfg, fuse_steps=16)
+        tr_a.run(PhaseDataLoader(src, tr_a.plan, 32), max_steps=mid)
+        assert tr_a.history[-1]["phase"] == 1
+        path = str(tmp_path / "merged.npz")
+        tr_a.save_checkpoint(path)
+
+        tr_b = Trainer(cfg, fuse_steps=16)
+        meta = tr_b.restore_checkpoint(path)
+        assert meta["phase"] == 1
+        assert isinstance(tr_b.state.tokens_seen, int)
+        tr_b.run(PhaseDataLoader(src, tr_b.plan, 32).resume(
+            tr_b.state.tokens_seen))
+        ref = full.history[mid:]
+        assert len(tr_b.history) == len(ref)
+        for x, y in zip(ref, tr_b.history):
+            assert x["step"] == y["step"]
+            assert x["phase"] == y["phase"]
+            assert x["lr"] == y["lr"]
+            assert x["tokens"] == y["tokens"]
+            np.testing.assert_array_equal(x["loss"], y["loss"])
+        assert [key[2] for key in tr_b._step_cache] == [16]
+        for p, q in zip(jax.tree.leaves(full.state.params),
+                        jax.tree.leaves(tr_b.state.params)):
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
 
     def test_log_every_zero_logs_every_step(self):
         cfg = _cfg(steps=12, log_every=0)
