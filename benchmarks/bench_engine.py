@@ -190,10 +190,32 @@ def run(steps: int = 144):
     return rows
 
 
+def check_compiles(result) -> list:
+    """The PR 4 invariant, as a CI gate (``--check-compiles``): every
+    multi-phase ramp in the ``compiles`` section must have compiled
+    exactly one K-sized fused executable per *distinct* batch size —
+    a regression here means remainder programs are back."""
+    errors = []
+    for kind, rec in result["compiles"].items():
+        if rec["executables"] != rec["distinct_batch_sizes"]:
+            errors.append(
+                f"{kind}: {rec['executables']} executables for "
+                f"{rec['distinct_batch_sizes']} distinct batch sizes")
+        if rec["chunk_ks"] != [16]:
+            errors.append(
+                f"{kind}: chunk programs {rec['chunk_ks']} != [16] — "
+                f"a tail chunk compiled its own remainder program")
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=144)
     ap.add_argument("--out", default="artifacts/bench_engine.json")
+    ap.add_argument("--check-compiles", action="store_true",
+                    help="exit non-zero unless the compiles section "
+                         "shows one fused executable per distinct "
+                         "batch size (the CI bench-smoke gate)")
     args = ap.parse_args()
     rows, result = _measure(args.steps)
     print("name,us_per_call,derived")
@@ -203,6 +225,14 @@ def main():
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"→ {args.out}")
+    if args.check_compiles:
+        errors = check_compiles(result)
+        for e in errors:
+            print(f"compiles invariant VIOLATED: {e}")
+        if errors:
+            raise SystemExit(1)
+        print("compiles invariant OK: one executable per distinct "
+              "batch size")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,6 @@ import numpy as np
 from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
                            ScheduleConfig)
 from repro.core import theory as T
-from repro.core.seesaw import build_plan
 from repro.data import MarkovLM, PhaseDataLoader
 from repro.train.trainer import Trainer
 

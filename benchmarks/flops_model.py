@@ -15,9 +15,7 @@ causal-masked attention is charged FULL S² for the baseline XLA path
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
-
-from repro.configs.base import (INPUT_SHAPES, HybridConfig, InputShape,
+from repro.configs.base import (HybridConfig, InputShape,
                                 ModelConfig, SSMConfig)
 from repro.configs.base import _pattern as pattern_of
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 

@@ -18,7 +18,7 @@ which is exactly why a batch ramp is the right shape of schedule.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

@@ -16,7 +16,7 @@ Guarantees enforced here (paper §3):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
 from repro.core import schedules as S

@@ -118,6 +118,12 @@ class PhaseDataLoader:
                     "a simulated process_count only makes sense "
                     "mesh-less (host-level arrays); with a mesh the "
                     "process layout comes from the jax runtime")
+            if mesh is not None and self._pcount > 1:
+                # verified from the actual NamedSharding, so per-host
+                # feeding is safe on custom meshes too, not just the
+                # layout jax.make_mesh produces
+                from repro.launch.mesh import assert_per_host_row_blocks
+                assert_per_host_row_blocks(mesh, self._pcount)
         else:
             self._pcount, self._pidx = 1, 0
         # (phase_idx, steps_done_in_phase, absolute seq cursor)
@@ -130,8 +136,9 @@ class PhaseDataLoader:
         boundaries are exact integers, so the arithmetic is integral
         (a float within 0.5 of a boundary is accepted for backward
         compatibility with f32-era checkpoints)."""
+        from repro.train.checkpoint import exact_tokens
         steps = self.plan.steps_per_phase(self.seq_len)
-        tok = int(round(float(tokens_seen)))
+        tok = exact_tokens(tokens_seen)
         cursor = 0
         for pi, (p, n) in enumerate(zip(self.plan.phases, steps)):
             per = p.batch_size * self.seq_len

@@ -7,11 +7,9 @@ pure-jnp reference — that is the path the distributed dry-run lowers.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref

@@ -18,7 +18,6 @@ masks/CB 2·64 KB + outputs ~96 KB ⇒ < 0.5 MB.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

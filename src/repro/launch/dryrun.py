@@ -24,7 +24,6 @@ import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
-import numpy as np       # noqa: E402
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
 from repro.launch import steps as ST     # noqa: E402

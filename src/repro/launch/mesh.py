@@ -32,6 +32,66 @@ def data_parallel_size(mesh) -> int:
     return max(n, 1)
 
 
+def _row_blocks_by_process(indices_map, n_rows: int):
+    """{process_index: set of data-slot rows it owns} from a
+    ``devices_indices_map`` of a length-``n_rows`` batch axis."""
+    per: dict = {}
+    for dev, idx in indices_map.items():
+        sl = idx[0] if idx else slice(0, n_rows)
+        start = sl.start or 0
+        stop = n_rows if sl.stop is None else sl.stop
+        per.setdefault(dev.process_index, set()).update(
+            range(start, stop))
+    return per
+
+
+def check_per_host_row_blocks(per_process, n_rows: int,
+                              process_count: int):
+    """Pure check behind :func:`assert_per_host_row_blocks` (testable
+    with synthetic layouts): process ``p`` must own exactly the
+    contiguous slot block ``[p*n/N, (p+1)*n/N)`` — the layout the
+    per-host loader samples (process p contributes rows
+    ``[p*B/N, (p+1)*B/N)`` of every global batch)."""
+    if n_rows % process_count:
+        raise ValueError(
+            f"data-parallel width {n_rows} does not divide across "
+            f"{process_count} host processes — per-host feeding "
+            f"cannot assign whole row blocks")
+    per = n_rows // process_count
+    for p in range(process_count):
+        want = list(range(p * per, (p + 1) * per))
+        got = sorted(per_process.get(p, ()))
+        if got != want:
+            raise ValueError(
+                f"process {p} owns data-axis slots {got} but per-host "
+                f"feeding requires the contiguous block "
+                f"[{want[0]}, {want[-1] + 1}) in process order — this "
+                f"mesh's device order breaks the loader's row-block "
+                f"assumption (jax.make_mesh layouts satisfy it; custom "
+                f"meshes must keep each process's devices contiguous "
+                f"along the data axes)")
+
+
+def assert_per_host_row_blocks(mesh, process_count: int | None = None):
+    """Assert — from the actual ``NamedSharding``, not a mesh-builder
+    heuristic — that each process owns one contiguous, process-ordered
+    block of the batch (data) axis, so ``per_host=True`` feeding is
+    safe on this mesh.  No-op for single-process runs or ``mesh=None``;
+    raises ``ValueError`` on custom meshes whose device order would
+    silently misassign rows."""
+    nproc = (jax.process_count() if process_count is None
+             else process_count)
+    if mesh is None or nproc <= 1:
+        return
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    n = data_parallel_size(mesh)
+    axes = tuple(a for a in ("pod", "data") if a in dict(mesh.shape))
+    sharding = NamedSharding(mesh, P(axes if axes else None))
+    per = _row_blocks_by_process(sharding.devices_indices_map((n,)), n)
+    check_per_host_row_blocks(per, n, nproc)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

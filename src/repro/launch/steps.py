@@ -33,12 +33,18 @@ def validate_feeding(plan, mesh, *, process_count: int | None = None):
     """Dry-run/launch check that a plan's batch ramp is feedable on
     this topology: every phase's global batch must divide across the
     host processes (per-host data feeding) and across the mesh's
-    data-parallel devices.  Raises ``ValueError`` on the first phase
-    that cannot shard; returns the plan otherwise."""
+    data-parallel devices, and each process must own a contiguous,
+    process-ordered row block of the data axes (asserted from the
+    actual ``NamedSharding``, so custom meshes are covered).  Raises
+    ``ValueError`` on the first violation; returns the plan
+    otherwise."""
     from repro.data.pipeline import validate_per_host_plan
-    from repro.launch.mesh import data_parallel_size
+    from repro.launch.mesh import (assert_per_host_row_blocks,
+                                   data_parallel_size)
     n_proc = jax.process_count() if process_count is None \
         else process_count
+    if mesh is not None:
+        assert_per_host_row_blocks(mesh, n_proc)
     return validate_per_host_plan(plan, n_proc,
                                   data_parallel_size(mesh))
 

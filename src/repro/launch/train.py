@@ -2,14 +2,39 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch seesaw-150m \
         --schedule seesaw --steps 200 [--mesh 2x2] [--multipod] \
-        [--fuse-steps 16] [--checkpoint ckpt.npz] [--resume] \
-        [--per-host]
+        [--fuse-steps 16] [--checkpoint ckpt] [--resume] \
+        [--per-host] [--coordinator HOST:PORT --num-processes N \
+         --process-id I]
+
+Multi-process launch: run the same command on every host with
+``--coordinator`` (process 0's address), ``--num-processes`` and a
+distinct ``--process-id`` — or the equivalent environment variables
+``JAX_COORDINATOR_ADDRESS`` / ``JAX_NUM_PROCESSES`` /
+``JAX_PROCESS_ID`` (flags win).  :func:`maybe_init_distributed` wires
+``jax.distributed.initialize`` before any device use and is skipped
+automatically for single-process runs; on CPU it selects the gloo
+cross-process collective backend.  In a multi-process run per-host
+data feeding is forced on, the default mesh spans all global devices
+as ``(device_count, 1) = data x model``, and
+``launch.mesh.assert_per_host_row_blocks`` verifies — from the actual
+``NamedSharding`` — that each process owns a contiguous row block of
+the data axis, so custom ``--mesh`` layouts that would misassign rows
+fail fast instead of training on the wrong data.
 
 ``--per-host`` turns on multi-host data feeding: each process samples
 only its ``jax.process_index()`` shard of the global batch and the
 global arrays are assembled across processes
 (``jax.make_array_from_process_local_data``); the ramp is validated up
 front so every phase's batch divides over processes and data devices.
+
+``--checkpoint`` names a sharded streaming checkpoint *directory*
+(an atomically-committed ``manifest.json`` + one ``arrays/<gen>/*.npy``
+per distinct global block; see :mod:`repro.train.checkpoint`): every
+process streams only its addressable replica-0 shards to disk in
+bounded chunks and process 0 commits the manifest in a single rename
+(an interrupted save leaves the previous checkpoint restorable), so
+save/restore never materializes a full replica per host and legacy
+single-file ``.npz`` checkpoints still restore.
 
 On real hardware the mesh comes from the platform; on this container a
 small host-device mesh (--host-devices N) exercises the identical pjit
@@ -23,6 +48,50 @@ from __future__ import annotations
 
 import argparse
 import os
+
+
+def maybe_init_distributed(coordinator=None, num_processes=None,
+                           process_id=None) -> bool:
+    """Wire ``jax.distributed.initialize`` from flags/environment;
+    returns True when a multi-process runtime was initialized.
+
+    Single-process runs (no coordinator, ``num_processes`` absent or
+    1) skip initialization entirely, so the launcher keeps working
+    with plain ``python -m repro.launch.train``.  Must be called
+    before any jax device use.  On an explicitly-CPU platform
+    (``JAX_PLATFORMS=cpu``) the gloo collective backend is selected —
+    without it cross-process collectives on CPU fail at the first
+    all-reduce."""
+    env = os.environ
+    coordinator = coordinator or env.get("JAX_COORDINATOR_ADDRESS")
+    if num_processes is None and env.get("JAX_NUM_PROCESSES"):
+        num_processes = int(env["JAX_NUM_PROCESSES"])
+    if process_id is None and env.get("JAX_PROCESS_ID"):
+        process_id = int(env["JAX_PROCESS_ID"])
+    if not coordinator and not num_processes:
+        return False
+    if num_processes is not None and num_processes <= 1 \
+            and not coordinator:
+        return False
+    if not (coordinator and num_processes and process_id is not None):
+        raise ValueError(
+            "multi-process launch needs all three of coordinator "
+            "address, num_processes and process_id (flags or "
+            "JAX_COORDINATOR_ADDRESS/JAX_NUM_PROCESSES/"
+            f"JAX_PROCESS_ID); got coordinator={coordinator!r}, "
+            f"num_processes={num_processes!r}, "
+            f"process_id={process_id!r}")
+    import jax
+    if "cpu" in env.get("JAX_PLATFORMS", "").split(","):
+        try:
+            jax.config.update("jax_cpu_collectives_implementation",
+                              "gloo")
+        except (AttributeError, ValueError):   # jaxlib without gloo
+            pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
 
 
 def main():
@@ -53,7 +122,17 @@ def main():
     ap.add_argument("--per-host", action="store_true",
                     help="each process feeds only its "
                          "jax.process_index() shard of the global "
-                         "batch (multi-host data feeding)")
+                         "batch (multi-host data feeding; forced on "
+                         "in multi-process runs)")
+    ap.add_argument("--coordinator", default=None,
+                    help="process 0's host:port for "
+                         "jax.distributed.initialize (or "
+                         "JAX_COORDINATOR_ADDRESS)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total process count of the multi-process "
+                         "run (or JAX_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's index (or JAX_PROCESS_ID)")
     ap.add_argument("--max-device-batch", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -63,11 +142,26 @@ def main():
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.host_devices}")
 
+    distributed = maybe_init_distributed(args.coordinator,
+                                         args.num_processes,
+                                         args.process_id)
+
     import jax
     from repro.configs import (OptimizerConfig, RunConfig, ScheduleConfig,
                                get_config)
     from repro.data import MarkovLM, PhaseDataLoader
     from repro.train.trainer import Trainer
+
+    if distributed:
+        print(f"jax.distributed: process {jax.process_index()}"
+              f"/{jax.process_count()}, "
+              f"{jax.local_device_count()} local of "
+              f"{jax.device_count()} global devices")
+        if not args.per_host:
+            # one process cannot feed (or even address) the whole
+            # global batch in a real multi-process run
+            args.per_host = True
+            print("per-host data feeding forced on (multi-process)")
 
     model = get_config(args.arch)
     if args.reduced:
@@ -92,6 +186,10 @@ def main():
         names = ("data", "model")[:len(dims)] if len(dims) == 2 \
             else ("pod", "data", "model")
         mesh = jax.make_mesh(tuple(dims), names)
+    elif distributed:
+        # default multi-process topology: pure data parallelism over
+        # every global device
+        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
 
     trainer = Trainer(cfg, mesh=mesh, fuse_steps=args.fuse_steps,
                       max_device_batch=args.max_device_batch)

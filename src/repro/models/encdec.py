@@ -9,8 +9,6 @@ Serve: cross-attention K/V precomputed at prefill; decode is one-token.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

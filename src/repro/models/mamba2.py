@@ -10,7 +10,7 @@ Pallas kernel tiles (chunk × head) blocks into VMEM.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

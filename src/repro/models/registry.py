@@ -13,7 +13,7 @@ stays local.
 from __future__ import annotations
 
 import importlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ for training/prefill and an O(1) step for decode.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

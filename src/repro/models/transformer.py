@@ -12,7 +12,6 @@ the scanned body for training (remat).  Supports:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ from repro.models import moe as M
 from repro.models.layers import (Params, constrain, cross_entropy_chunked,
                                  embed_specs, fsdp_axis, init_embed,
                                  init_mlp, mlp, mlp_specs, residual_spec,
-                                 rmsnorm, trunc_normal)
+                                 rmsnorm)
 
 
 # --------------------------------------------------------------------- #

@@ -1,5 +1,35 @@
-"""Checkpointing: params/opt-state/step/tokens to a single .npz with
-path-flattened keys — dependency-free, works for any pytree of arrays.
+"""Sharded, streaming checkpoints for multi-process runs.
+
+A checkpoint is a **directory** (``path`` with any trailing ``.npz``
+stripped)::
+
+    <base>/
+      manifest.json     # THE commit marker, swapped in by one
+                        # os.replace: array index (key -> shape/dtype/
+                        # shard files) + the save's generation + meta
+      meta.json         # informational sidecar copy of the meta
+      arrays/<gen>/     # one .npy per distinct global block of each
+        00042.0.npy     # leaf: <leaf index in sorted key order>.<block>
+
+Each process writes only the blocks for which it holds the
+``replica_id == 0`` addressable shard, so every block is written exactly
+once globally and no process ever fetches replicas it does not own.
+Device->host transfers go through :func:`_to_host` in ``chunk_bytes``
+slices, so saving works for params larger than host RAM (bounded
+memory per transfer).  Process 0 commits the manifest after a
+cross-process barrier, so a manifest on disk implies every shard file
+it names is complete — and because each save streams into a fresh
+``arrays/<generation>/`` and the previous generation is deleted only
+after the commit, a save killed at ANY point leaves the last committed
+checkpoint fully restorable.
+
+Restore is the mirror image: every process reads only the block its
+target sharding makes addressable (shard files are memory-mapped, so a
+block read touches only the bytes it needs) and the global array is
+reassembled with ``jax.make_array_from_process_local_data``.  Legacy
+pre-PR-5 single-file ``<base>.npz`` checkpoints (see :func:`save_npz`)
+restore through the same path, including float ``tokens_seen`` metadata
+from before the exact-integer change.
 
 Phase-aware save/resume: ``save_phase_checkpoint`` records the plan
 position (phase index, batch size, schedule kind) next to
@@ -11,19 +41,44 @@ device-side LR curve picks up exactly where it left off.
 ``tokens_seen`` round-trips losslessly: the trainer passes an exact
 Python int and JSON preserves arbitrary-precision integers, so a
 resumed run continues from the exact token count however long the run
-(pre-integer float checkpoints still restore — the trainer rounds)."""
+(pre-integer float checkpoints still restore -- the trainer rounds)."""
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+import shutil
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+FORMAT_VERSION = 1
+DEFAULT_CHUNK_BYTES = 1 << 24          # 16 MiB per device->host slice
 
-def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
-    out = {}
+Block = Tuple[Tuple[int, int], ...]    # ((start, stop), ...) per dim
+
+
+def _to_host(x) -> np.ndarray:
+    """The single device->host transfer point of the save path.  Every
+    call moves at most one ``chunk_bytes`` slice of one shard — tests
+    monkeypatch this to prove no full replica is ever materialized."""
+    return np.asarray(x)
+
+
+def _barrier(name: str):
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(name)
+
+
+# --------------------------------------------------------------------- #
+# pytree <-> flat path-keyed dict
+# --------------------------------------------------------------------- #
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    """Path-flatten a pytree; leaves are kept as-is (jax.Array leaves
+    are NOT fetched to host — the save path streams their shards)."""
+    out: Dict[str, Any] = {}
     if isinstance(tree, dict):
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}/"))
@@ -31,57 +86,400 @@ def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}[{i}]/"))
     else:
-        out[prefix.rstrip("/")] = np.asarray(tree)
+        out[prefix.rstrip("/")] = tree
     return out
 
 
-def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=""):
+def _unflatten(template, flat: Dict[str, Any], prefix=""):
+    """Rebuild the template's structure from leaf values in ``flat``
+    (values are used verbatim — the assembly step already produced
+    correctly-typed, correctly-sharded arrays)."""
     if isinstance(template, dict):
-        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+        return {k: _unflatten(v, flat, f"{prefix}{k}/")
                 for k, v in template.items()}
     if isinstance(template, (list, tuple)):
-        vals = [_unflatten_into(v, flat, f"{prefix}[{i}]/")
+        vals = [_unflatten(v, flat, f"{prefix}[{i}]/")
                 for i, v in enumerate(template)]
         return type(template)(vals)
-    arr = flat[prefix.rstrip("/")]
-    return jax.numpy.asarray(arr, dtype=template.dtype)
+    return flat[prefix.rstrip("/")]
 
 
 def _base(path: str) -> str:
     return path[:-4] if path.endswith(".npz") else path
 
 
-def save(path: str, params, opt_state, step: int, tokens_seen: float,
-         extra: Dict[str, Any] | None = None):
+# --------------------------------------------------------------------- #
+# block geometry
+# --------------------------------------------------------------------- #
+
+def _norm_index(idx, shape) -> Block:
+    """A devices_indices_map slice tuple as ((start, stop), ...)."""
+    return tuple((sl.start or 0, shape[d] if sl.stop is None else sl.stop)
+                 for d, sl in enumerate(idx))
+
+
+def _full_block(shape) -> Block:
+    return tuple((0, n) for n in shape)
+
+
+def _volume(block: Block) -> int:
+    v = 1
+    for a, b in block:
+        v *= b - a
+    return v
+
+
+def _is_private(leaf) -> bool:
+    """In a multi-process run, a fully-addressable array is a
+    process-private replica (e.g. freshly-initialized state before the
+    first sharded step): every process holds an identical copy, so
+    process 0's is canonical and the others must not race to write."""
+    return (jax.process_count() > 1
+            and leaf.sharding.is_fully_addressable)
+
+
+def _global_blocks(leaf):
+    """(shape, dtype, ordered distinct global blocks) for a leaf —
+    identical on every process (``devices_indices_map`` is global
+    topology), which is what lets process 0 write a manifest naming
+    files other processes produced."""
+    if isinstance(leaf, jax.Array):
+        shape = tuple(leaf.shape)
+        if _is_private(leaf):
+            return shape, np.dtype(leaf.dtype), [_full_block(shape)]
+        imap = leaf.sharding.devices_indices_map(shape)
+        blocks = sorted({_norm_index(i, shape) for i in imap.values()})
+        return shape, np.dtype(leaf.dtype), blocks
+    arr = np.asarray(leaf)
+    return tuple(arr.shape), arr.dtype, [_full_block(arr.shape)]
+
+
+def _writer_blocks(leaf) -> Dict[Block, Any]:
+    """The blocks THIS process must write: its addressable
+    ``replica_id == 0`` shards (exactly one process owns replica 0 of
+    each block, so each file has a unique writer)."""
+    if isinstance(leaf, jax.Array):
+        shape = tuple(leaf.shape)
+        if _is_private(leaf):
+            return ({_full_block(shape): leaf}
+                    if jax.process_index() == 0 else {})
+        return {_norm_index(s.index, shape): s.data
+                for s in leaf.addressable_shards if s.replica_id == 0}
+    if jax.process_index() == 0:
+        arr = np.asarray(leaf)
+        return {_full_block(arr.shape): arr}
+    return {}
+
+
+def _stream_write(path: str, data, chunk_bytes: int):
+    """Write one shard to a .npy file in bounded-memory slices: the
+    shard is viewed flat and copied ``chunk_bytes`` at a time, so no
+    single device→host transfer ever exceeds the chunk whatever the
+    shard's row shape (device arrays are sliced on device)."""
+    shape = tuple(data.shape)
+    dtype = np.dtype(data.dtype)
+    mm = np.lib.format.open_memmap(path, mode="w+", dtype=dtype,
+                                   shape=shape)
+    try:
+        flat = mm.reshape(-1)             # writes through to the file
+        src = data.reshape(-1)
+        elems = max(1, int(chunk_bytes) // max(dtype.itemsize, 1))
+        for i in range(0, flat.shape[0], elems):
+            flat[i:i + elems] = _to_host(src[i:i + elems])
+        mm.flush()
+    finally:
+        del mm
+
+
+def _shard_file(gen: int, leaf_i: int, block_j: int) -> str:
+    return os.path.join("arrays", str(gen),
+                        f"{leaf_i:05d}.{block_j}.npy")
+
+
+def _committed_generation(base: str) -> int:
+    """Generation of the currently-committed manifest, or -1.  Every
+    process reads the same committed manifest, so the next generation
+    number is agreed on without communication."""
+    try:
+        with open(os.path.join(base, "manifest.json")) as f:
+            return int(json.load(f).get("generation", 0))
+    except (FileNotFoundError, json.JSONDecodeError):
+        return -1
+
+
+# --------------------------------------------------------------------- #
+# save
+# --------------------------------------------------------------------- #
+
+def save(path: str, params, opt_state, step: int, tokens_seen: int,
+         extra: Optional[Dict[str, Any]] = None, *,
+         chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+    """Write a sharded streaming checkpoint directory at ``path`` (any
+    trailing ``.npz`` is stripped — the name stays launcher-compatible).
+    Safe to call from every process of a multi-process run; collective
+    (all processes must call it).
+
+    Crash-safe: shards stream into a fresh ``arrays/<generation>/``
+    while the previous generation and its manifest stay untouched, and
+    the new manifest lands in one ``os.replace`` — a save killed at
+    any point leaves the last committed checkpoint fully restorable
+    (uncommitted generations are garbage-collected by the next
+    save)."""
     base = _base(path)
-    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    parent = os.path.dirname(base)
     flat = {}
     flat.update({f"p:{k}": v for k, v in _flatten(params).items()})
     flat.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+
+    committed = _committed_generation(base)
+    gen = committed + 1
+    arrays_root = os.path.join(base, "arrays")
+    gen_dir = os.path.join(arrays_root, str(gen))
+    # every process must have ENTERED the save (i.e. finished whatever
+    # it was still reading from this directory — e.g. a slower peer's
+    # restore when resuming and re-saving to the same path) before
+    # process 0 touches the directory
+    _barrier("ckpt-enter")
+    if jax.process_index() == 0:
+        os.makedirs(parent or ".", exist_ok=True)
+        if os.path.isdir(arrays_root):
+            # clear leftovers of interrupted saves; the committed
+            # generation stays restorable until the new one commits
+            for entry in os.listdir(arrays_root):
+                if entry != str(committed):
+                    shutil.rmtree(os.path.join(arrays_root, entry))
+        os.makedirs(gen_dir, exist_ok=True)
+    _barrier("ckpt-prepare")
+
+    meta = {"step": int(step), "tokens_seen": tokens_seen,
+            **(extra or {})}
+    manifest = {"format": FORMAT_VERSION, "generation": gen,
+                "meta": meta, "arrays": {}}
+    for li, (key, leaf) in enumerate(sorted(flat.items())):
+        shape, dtype, blocks = _global_blocks(leaf)
+        mine = _writer_blocks(leaf)
+        shards = []
+        for j, blk in enumerate(blocks):
+            fname = _shard_file(gen, li, j)
+            shards.append({"file": fname,
+                           "start": [a for a, _ in blk],
+                           "stop": [b for _, b in blk]})
+            if blk in mine:
+                _stream_write(os.path.join(base, fname), mine[blk],
+                              chunk_bytes)
+        manifest["arrays"][key] = {"shape": list(shape),
+                                   "dtype": dtype.name,
+                                   "shards": shards}
+    _barrier("ckpt-shards")
+
+    if jax.process_index() == 0:
+        # single-rename commit point; meta rides inside the manifest
+        # so array index and step/tokens can never disagree.  The
+        # meta.json sidecar is informational (humans, tooling).
+        tmp = os.path.join(base, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, os.path.join(base, "manifest.json"))
+        with open(os.path.join(base, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        # superseded state goes only AFTER the commit: the previous
+        # generation — and, on the first directory save over a legacy
+        # path, the old single-file .npz — must stay restorable while
+        # this save can still fail
+        old_gen = os.path.join(arrays_root, str(committed))
+        if committed >= 0 and os.path.isdir(old_gen):
+            shutil.rmtree(old_gen)
+        for stale in (base + ".npz", base + ".meta.json"):
+            if os.path.exists(stale):
+                os.remove(stale)
+    _barrier("ckpt-commit")
+
+
+def save_npz(path: str, params, opt_state, step: int, tokens_seen,
+             extra: Optional[Dict[str, Any]] = None):
+    """The legacy pre-PR-5 writer: one monolithic ``<base>.npz`` with
+    every array fetched to host, plus ``<base>.meta.json``.  Kept for
+    the migration tests and for producing old-format fixtures; new code
+    should use :func:`save`."""
+    base = _base(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    flat = {}
+    flat.update({f"p:{k}": np.asarray(v)
+                 for k, v in _flatten(params).items()})
+    flat.update({f"o:{k}": np.asarray(v)
+                 for k, v in _flatten(opt_state).items()})
     np.savez(base + ".npz", **flat)
     meta = {"step": step, "tokens_seen": tokens_seen, **(extra or {})}
     with open(base + ".meta.json", "w") as f:
         json.dump(meta, f)
 
 
-def restore(path: str, params_template, opt_template
-            ) -> Tuple[Any, Any, Dict[str, Any]]:
-    base = _base(path)
+# --------------------------------------------------------------------- #
+# restore
+# --------------------------------------------------------------------- #
+
+def _local_box(sharding, gshape) -> Tuple[Block, ...]:
+    """This process's contiguous block of the global array under
+    ``sharding``: the bounding box of its addressable shard indices,
+    verified to be exactly tiled by them (the layout
+    ``make_array_from_process_local_data`` requires)."""
+    imap = sharding.addressable_devices_indices_map(gshape)
+    blocks = {_norm_index(i, gshape) for i in imap.values()}
+    if not gshape:
+        return ()
+    box = tuple((min(b[d][0] for b in blocks),
+                 max(b[d][1] for b in blocks))
+                for d in range(len(gshape)))
+    if sum(_volume(b) for b in blocks) != _volume(box):
+        raise ValueError(
+            f"process {jax.process_index()}'s addressable shards "
+            f"{sorted(blocks)} do not tile a contiguous block of the "
+            f"global array {gshape} — this sharding cannot be "
+            f"reassembled with jax.make_array_from_process_local_data")
+    return box
+
+
+def _fill_block(out: np.ndarray, box: Block, saved_blocks):
+    """Fill ``out`` (the local box) from whichever saved shard blocks
+    overlap it; each ``reader()`` memory-maps one shard file, so only
+    the overlapping bytes are actually read."""
+    for sb, reader in saved_blocks:
+        lo = tuple(max(a, c) for (a, _), (c, _) in zip(box, sb))
+        hi = tuple(min(b, d) for (_, b), (_, d) in zip(box, sb))
+        if any(l >= h for l, h in zip(lo, hi)):
+            continue
+        src_sl = tuple(slice(l - c, h - c)
+                       for l, h, (c, _) in zip(lo, hi, sb))
+        dst_sl = tuple(slice(l - a, h - a)
+                       for l, h, (a, _) in zip(lo, hi, box))
+        out[dst_sl] = reader()[src_sl]
+
+
+def _entry_blocks(entry, base):
+    """(saved block, lazy memmap reader) per shard file of a manifest
+    entry.  0-d arrays are read eagerly (memmap of a scalar is not
+    worth the bookkeeping)."""
+    out = []
+    for sh in entry["shards"]:
+        blk = tuple(zip(sh["start"], sh["stop"]))
+        fpath = os.path.join(base, sh["file"])
+        if blk:
+            out.append((blk, lambda p=fpath: np.load(p, mmap_mode="r")))
+        else:
+            out.append((blk, lambda p=fpath: np.load(p)))
+    return out
+
+
+def _assemble(gshape, template, sharding, saved_blocks):
+    """One leaf: read this process's block and build the output array.
+    Without a target sharding the full array is read onto the single
+    local device (the single-process path); with one, only the
+    process-local box is ever materialized on host."""
+    dtype = np.dtype(template.dtype)
+    if not gshape:                              # scalars: read eagerly
+        _, reader = saved_blocks[0]
+        val = np.asarray(reader(), dtype)
+        if sharding is None:
+            return jax.numpy.asarray(val, dtype=template.dtype)
+        return jax.make_array_from_process_local_data(sharding, val, ())
+    box = (_full_block(gshape) if sharding is None
+           else _local_box(sharding, gshape))
+    local = np.empty(tuple(b - a for a, b in box), dtype)
+    _fill_block(local, box, saved_blocks)
+    if sharding is None:
+        return jax.numpy.asarray(local, dtype=template.dtype)
+    return jax.make_array_from_process_local_data(sharding, local,
+                                                  gshape)
+
+
+def _tree_shardings(shardings, template):
+    if shardings is None:
+        return {k: None for k in _flatten(template)}
+    return _flatten(shardings)
+
+
+def _restore_manifest(base: str, params_template, opt_template,
+                      shardings) -> Tuple[Any, Any, Dict[str, Any]]:
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest["meta"]       # committed atomically with the index
+    psh, osh = shardings if shardings is not None else (None, None)
+    out = []
+    for prefix, template, sh in (("p:", params_template, psh),
+                                 ("o:", opt_template, osh)):
+        flat_t = _flatten(template)
+        flat_s = _tree_shardings(sh, template)
+        flat = {}
+        for k, tmpl in flat_t.items():
+            entry = manifest["arrays"][prefix + k]
+            flat[k] = _assemble(tuple(entry["shape"]), tmpl,
+                                flat_s[k], _entry_blocks(entry, base))
+        out.append(_unflatten(template, flat))
+    return out[0], out[1], meta
+
+
+def _restore_legacy_npz(base: str, params_template, opt_template,
+                        shardings) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Pre-PR-5 single-file checkpoints through the same assembly path:
+    each whole array is one saved block, so a sharded restore still
+    slices out only the process-local box before device placement."""
     data = np.load(base + ".npz")
-    flat_p = {k[2:]: data[k] for k in data.files if k.startswith("p:")}
-    flat_o = {k[2:]: data[k] for k in data.files if k.startswith("o:")}
-    params = _unflatten_into(params_template, flat_p)
-    opt = _unflatten_into(opt_template, flat_o)
     with open(base + ".meta.json") as f:
         meta = json.load(f)
-    return params, opt, meta
+    psh, osh = shardings if shardings is not None else (None, None)
+    out = []
+    for prefix, template, sh in (("p:", params_template, psh),
+                                 ("o:", opt_template, osh)):
+        flat_t = _flatten(template)
+        flat_s = _tree_shardings(sh, template)
+        flat = {}
+        for k, tmpl in flat_t.items():
+            arr = data[prefix + k]
+            blocks = [(_full_block(arr.shape), lambda a=arr: a)]
+            flat[k] = _assemble(tuple(arr.shape), tmpl, flat_s[k],
+                                blocks)
+        out.append(_unflatten(template, flat))
+    return out[0], out[1], meta
+
+
+def restore(path: str, params_template, opt_template, *,
+            shardings: Optional[Tuple[Any, Any]] = None
+            ) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Restore ``(params, opt_state, meta)`` from a checkpoint at
+    ``path`` — a sharded directory (preferred) or a legacy single-file
+    ``.npz``.  ``shardings`` is an optional ``(param_tree, opt_tree)``
+    of target ``NamedSharding``s (see
+    ``PhaseEngine.state_shardings``): with it, every process reads and
+    device-puts only its addressable block and the global arrays are
+    reassembled across processes; without it, arrays land replicated on
+    the local default device (single-process behaviour)."""
+    base = _base(path)
+    if os.path.exists(os.path.join(base, "manifest.json")):
+        return _restore_manifest(base, params_template, opt_template,
+                                 shardings)
+    if os.path.exists(base + ".npz"):
+        return _restore_legacy_npz(base, params_template, opt_template,
+                                   shardings)
+    raise FileNotFoundError(
+        f"no checkpoint at {path!r}: neither {base}/manifest.json "
+        f"(sharded directory) nor {base}.npz (legacy single-file)")
+
+
+def exact_tokens(tokens_seen) -> int:
+    """A checkpoint's ``tokens_seen`` as an exact int.  Post-PR-4
+    metadata is already an arbitrary-precision JSON int and must NOT
+    round-trip through float64 (exact only to 2^53); legacy float
+    values are rounded (their step boundaries are integral)."""
+    if isinstance(tokens_seen, int):
+        return tokens_seen
+    return int(round(float(tokens_seen)))
 
 
 # --------------------------------------------------------------------- #
 # phase-aware save/resume
 # --------------------------------------------------------------------- #
 
-def _plan_phase(plan, tokens_seen: float, seq_len):
+def _plan_phase(plan, tokens_seen: int, seq_len):
     """Phase the next step belongs to — realized (step-quantized)
     boundaries when seq_len is known, matching the loader and the
     device LR; ideal token boundaries otherwise."""
@@ -91,34 +489,42 @@ def _plan_phase(plan, tokens_seen: float, seq_len):
 
 
 def save_phase_checkpoint(path: str, params, opt_state, step: int,
-                          tokens_seen: float, *, plan,
-                          seq_len: int | None = None,
-                          extra: Dict[str, Any] | None = None):
+                          tokens_seen: int, *, plan,
+                          seq_len: Optional[int] = None,
+                          extra: Optional[Dict[str, Any]] = None,
+                          chunk_bytes: int = DEFAULT_CHUNK_BYTES):
     """Like :func:`save`, plus the plan position at ``tokens_seen``:
-    the phase the *next* step belongs to and its batch size."""
+    the phase the *next* step belongs to and its batch size.
+    ``tokens_seen`` is the trainer's exact host integer."""
     ph = _plan_phase(plan, tokens_seen, seq_len)
     meta = {"phase": ph.index, "batch_size": ph.batch_size,
             "schedule_kind": plan.kind,
             "total_tokens": plan.total_tokens, **(extra or {})}
-    save(path, params, opt_state, step, tokens_seen, extra=meta)
+    save(path, params, opt_state, step, tokens_seen, extra=meta,
+         chunk_bytes=chunk_bytes)
 
 
 def restore_phase_checkpoint(path: str, params_template, opt_template,
-                             *, plan, seq_len: int | None = None
+                             *, plan, seq_len: Optional[int] = None,
+                             shardings: Optional[Tuple[Any, Any]] = None
                              ) -> Tuple[Any, Any, Dict[str, Any]]:
     """Restore and verify the plan agrees with the checkpoint: the
     restored ``tokens_seen`` must land in the recorded phase with the
     recorded batch size, or the resumed run would silently train with
-    the wrong compiled step / LR scale."""
-    params, opt, meta = restore(path, params_template, opt_template)
+    the wrong compiled step / LR scale.  ``tokens_seen`` in the
+    returned meta is an exact int for post-PR-4 checkpoints and a float
+    for legacy ones (callers round — boundaries are integral)."""
+    params, opt, meta = restore(path, params_template, opt_template,
+                                shardings=shardings)
     if "phase" in meta:
-        ph = _plan_phase(plan, float(meta["tokens_seen"]), seq_len)
+        tok = exact_tokens(meta["tokens_seen"])
+        ph = _plan_phase(plan, tok, seq_len)
         if (ph.index != meta["phase"]
                 or ph.batch_size != meta["batch_size"]):
             raise ValueError(
                 f"checkpoint was saved in phase {meta['phase']} "
                 f"(batch {meta['batch_size']}) but this plan puts "
-                f"tokens_seen={meta['tokens_seen']:.0f} in phase "
+                f"tokens_seen={tok} in phase "
                 f"{ph.index} (batch {ph.batch_size}) — schedule "
                 f"mismatch between save and resume")
     return params, opt, meta

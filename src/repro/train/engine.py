@@ -310,6 +310,28 @@ class PhaseEngine:
     def _batch_axes(self):
         return ("pod", "data") if self.multi_pod else ("data",)
 
+    def _state_specs(self):
+        """(param PartitionSpec tree, opt-state PartitionSpec tree)."""
+        pspec = R.param_specs(self.cfg.model, self.multi_pod)
+        pstruct = param_structs(self.cfg.model)
+        ostruct = jax.eval_shape(self.optimizer.init, pstruct)
+        return pspec, opt_state_specs(pspec, ostruct)
+
+    def state_shardings(self):
+        """``(param NamedSharding tree, opt-state NamedSharding tree)``
+        of the run's train state on this engine's mesh — what the
+        checkpoint layer needs to restore each process's addressable
+        shards only (``checkpoint.restore(..., shardings=...)``).
+        ``None`` without a mesh (single-device placement) — or with a
+        duck-typed mesh stand-in (only real meshes can build
+        ``NamedSharding``s; geometry helpers accept anything with a
+        ``.shape``)."""
+        if not isinstance(self.mesh, jax.sharding.Mesh):
+            return None
+        pspec, ospec = self._state_specs()
+        return (named_shardings(self.mesh, pspec),
+                named_shardings(self.mesh, ospec))
+
     def _shardings(self, stacked_batch):
         """(in_shardings, out_shardings) for the fused step.  Inputs:
         (params, opt_state, tokens, step0, n_valid, batches) with the
@@ -319,10 +341,7 @@ class PhaseEngine:
         propagation inferred, and the *next* compiled program (a new
         batch size in the ramp) would then reject the arg as
         mismatched mid-run."""
-        pspec = R.param_specs(self.cfg.model, self.multi_pod)
-        pstruct = param_structs(self.cfg.model)
-        ostruct = jax.eval_shape(self.optimizer.init, pstruct)
-        ospec = opt_state_specs(pspec, ostruct)
+        pspec, ospec = self._state_specs()
         axes = self._batch_axes()
 
         def bspec(x):

@@ -4,7 +4,6 @@ cache mirroring the trainer's per-batch-size cache."""
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.core.seesaw import build_plan
@@ -45,6 +46,19 @@ class TrainState:
     # device only ever sees a once-rounded f32 base plus an int32
     # per-chunk offset, so the carry never drifts however long the run
     tokens_seen: int = 0
+
+
+def _place_like(tree, shardings):
+    """Initial state placement onto the mesh: in a multi-process run a
+    process-private (single-device) array cannot feed a jitted step
+    whose ``in_shardings`` span other processes, so each process
+    contributes its addressable blocks of the identically-seeded host
+    value and jax assembles the global array."""
+    def place(x, s):
+        host = np.asarray(x)
+        return jax.make_array_from_callback(host.shape, s,
+                                            lambda idx: host[idx])
+    return jax.tree.map(place, tree, shardings)
 
 
 def make_train_step(cfg: RunConfig, optimizer: O.Optimizer, *,
@@ -85,6 +99,13 @@ class Trainer:
         key = jax.random.PRNGKey(cfg.seed + seed)
         params = R.init_params(key, cfg.model)
         opt_state = self.optimizer.init(params)
+        # single-process runs skip this: jit's in_shardings place the
+        # state directly, without a host round-trip of every leaf
+        if jax.process_count() > 1:
+            sh = self.engine.state_shardings()
+            if sh is not None:
+                params = _place_like(params, sh[0])
+                opt_state = _place_like(opt_state, sh[1])
         self.state = TrainState(params, opt_state)
         self.history: List[Dict[str, float]] = []
 
@@ -104,19 +125,30 @@ class Trainer:
         return self.engine.micro_batches(batch_size)
 
     # -- checkpointing -------------------------------------------------- #
-    def save_checkpoint(self, path: str):
+    def save_checkpoint(self, path: str,
+                        chunk_bytes: int = CKPT.DEFAULT_CHUNK_BYTES):
+        """Write a sharded streaming checkpoint directory (collective
+        in a multi-process run: every process writes only the shards it
+        owns, in ``chunk_bytes``-bounded device→host slices)."""
         CKPT.save_phase_checkpoint(path, self.state.params,
                                    self.state.opt_state, self.state.step,
                                    self.state.tokens_seen, plan=self.plan,
-                                   seq_len=self.cfg.seq_len)
+                                   seq_len=self.cfg.seq_len,
+                                   chunk_bytes=chunk_bytes)
 
     def restore_checkpoint(self, path: str) -> Dict[str, Any]:
+        """Restore sharded-directory or legacy ``.npz`` checkpoints.
+        With a mesh, each process reads only its addressable block of
+        every array and the global state is reassembled across
+        processes — no host ever holds a full replica of a sharded
+        leaf."""
         p, s, meta = CKPT.restore_phase_checkpoint(
             path, self.state.params, self.state.opt_state, plan=self.plan,
-            seq_len=self.cfg.seq_len)
+            seq_len=self.cfg.seq_len,
+            shardings=self.engine.state_shardings())
         self.state.params, self.state.opt_state = p, s
         self.state.step = int(meta["step"])
-        self.state.tokens_seen = int(round(float(meta["tokens_seen"])))
+        self.state.tokens_seen = CKPT.exact_tokens(meta["tokens_seen"])
         return meta
 
     # -- fused run loop ------------------------------------------------- #

@@ -13,8 +13,11 @@ their last stdout line.
 """
 import json
 import os
+import socket
 import subprocess
 import sys
+import threading
+import time
 
 import pytest
 
@@ -22,19 +25,79 @@ ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
 
 
+def _env(devices: int):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}")
+    return env
+
+
 @pytest.fixture
 def run_subprocess():
     def run(script: str, *argv, devices: int = 8, timeout: int = 420):
-        env = dict(os.environ)
-        env["PYTHONPATH"] = os.path.join(ROOT, "src")
-        env["JAX_PLATFORMS"] = "cpu"
-        env["XLA_FLAGS"] = (
-            env.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={devices}")
         out = subprocess.run(
             [sys.executable, "-c", script, *map(str, argv)],
-            capture_output=True, text=True, env=env, timeout=timeout)
+            capture_output=True, text=True, env=_env(devices),
+            timeout=timeout)
         assert out.returncode == 0, out.stderr[-3000:]
         return json.loads(out.stdout.strip().splitlines()[-1])
+
+    return run
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.fixture
+def run_multiprocess():
+    """Launch ``nprocs`` copies of ``script`` as a true ``jax.distributed``
+    process group over a local TCP coordinator.  Each copy receives
+    ``(process_id, nprocs, port, *argv)`` as argv and the same pinned
+    CPU environment as ``run_subprocess`` (``devices`` forced host
+    devices *per process*).  Returns the JSON object printed as the
+    last stdout line of process 0."""
+
+    def run(script: str, *argv, nprocs: int = 2, devices: int = 1,
+            timeout: int = 540):
+        port = _free_port()
+        procs = [
+            subprocess.Popen(
+                [sys.executable, "-c", script, str(pid), str(nprocs),
+                 str(port), *map(str, argv)],
+                stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                text=True, env=_env(devices))
+            for pid in range(nprocs)]
+        # drain every process's pipes CONCURRENTLY: a child that fills
+        # its 64 KiB pipe while a sibling is being communicate()d would
+        # block mid-write, drop out of the collectives, and turn its
+        # real traceback into an opaque group-wide timeout
+        outs = [None] * nprocs
+        threads = [
+            threading.Thread(target=lambda i=i, p=p: outs.__setitem__(
+                i, p.communicate()), daemon=True)
+            for i, p in enumerate(procs)]
+        for t in threads:
+            t.start()
+        deadline = time.monotonic() + timeout
+        for t in threads:
+            t.join(max(deadline - time.monotonic(), 1))
+        if any(t.is_alive() for t in threads):
+            for p in procs:
+                p.kill()
+            for t in threads:
+                t.join(10)
+            raise subprocess.TimeoutExpired(
+                cmd="run_multiprocess", timeout=timeout,
+                stderr="; ".join(
+                    (o[1] or "")[-500:] for o in outs if o))
+        for p, (_, err) in zip(procs, outs):
+            assert p.returncode == 0, err[-3000:]
+        return json.loads(outs[0][0].strip().splitlines()[-1])
 
     return run

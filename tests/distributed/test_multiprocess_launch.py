@@ -1,0 +1,203 @@
+"""True 2-process ``jax.distributed`` launch (the PR 5 tentpole proof).
+
+Two real OS processes (1 CPU device each) form a process group over a
+local TCP coordinator through ``launch.train.maybe_init_distributed``
+— the exact wiring the production launcher uses — and train the
+Seesaw batch ramp with per-host data feeding on a global ``(2, 1)``
+data x model mesh.  The run is checkpointed mid-ramp exactly on the
+first merged-segment (batch-size) boundary into the sharded streaming
+directory format, resumed in a fresh trainer, and the final params
+must match the single-process run on the identical mesh **bitwise**
+(float32 per the bf16-drift note).  Along the way the script proves
+no process ever materializes a full replica during save: every
+device→host transfer goes through ``checkpoint._to_host`` and is
+bounded by the chunk size.
+
+A second case saves a *data-sharded* array from both processes, so the
+one-writer-per-block protocol (each process streams only its
+addressable replica-0 shards; process 0 commits a manifest naming
+files it did not write) is exercised cross-process, and the restored
+global array must reassemble bitwise on both processes.
+"""
+import pytest
+
+# both modes share one cfg so the reference and distributed runs are
+# the same workload; argv: mode ("ref"|"dist"), ckpt dir, ref npz path
+SCRIPT = r"""
+import json, os, sys
+pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+mode, ckdir, refpath = sys.argv[4], sys.argv[5], sys.argv[6]
+
+from repro.launch.train import maybe_init_distributed
+if mode == "dist":
+    assert maybe_init_distributed(f"127.0.0.1:{port}", nproc, pid)
+
+import jax
+import numpy as np
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.launch.mesh import assert_per_host_row_blocks
+from repro.launch.steps import validate_feeding
+from repro.train import checkpoint as CKPT
+from repro.train.trainer import Trainer
+
+SEQ = 32
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                   d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                   d_ff=128, vocab_size=128, max_seq_len=64,
+                   rope_theta=1e4)
+cfg = RunConfig(
+    model=TINY,
+    schedule=ScheduleConfig(kind="seesaw", base_lr=1e-3, alpha=2.0,
+                            n_cuts=2),
+    optimizer=OptimizerConfig(kind="adamw"),
+    seq_len=SEQ, global_batch_size=8, total_tokens=SEQ * 8 * 24,
+    remat=False, dtype="float32")
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+assert_per_host_row_blocks(mesh)
+
+
+def make():
+    tr = Trainer(cfg, mesh=mesh, fuse_steps=4)
+    validate_feeding(tr.plan, mesh)
+    loader = PhaseDataLoader(MarkovLM(128, seed=0), tr.plan, SEQ,
+                             mesh=mesh, per_host=True)
+    return tr, loader
+
+
+def host_params(tr):
+    # params are replicated over the data axis: the local replica
+    # block IS the full leaf (never np.asarray the global array — it
+    # spans the other process's device)
+    return [np.asarray(x.addressable_shards[0].data)
+            for x in jax.tree.leaves(tr.state.params)]
+
+
+if mode == "ref":
+    tr, loader = make()
+    tr.run(loader)
+    np.savez(refpath, *host_params(tr))
+    print(json.dumps({"steps": len(tr.history),
+                      "n_devices": jax.device_count()}))
+    sys.exit(0)
+
+assert jax.process_count() == 2 and jax.device_count() == 2
+
+# -- interrupted leg: train to the first batch-size boundary ---------- #
+tr, loader = make()
+steps0 = tr.plan.steps_per_phase(SEQ)[0]
+tr.run(loader, max_steps=steps0)
+assert tr.state.step == steps0
+
+transfers = []
+orig = CKPT._to_host
+
+
+def spy(x):
+    h = orig(x)
+    transfers.append(h.nbytes)
+    return h
+
+
+CKPT._to_host = spy
+CHUNK = 1 << 12
+tr.save_checkpoint(ckdir, chunk_bytes=CHUNK)
+CKPT._to_host = orig
+
+# -- resumed leg: fresh trainer + compile cache, sharded restore ------ #
+tr2, loader2 = make()
+meta = tr2.restore_checkpoint(ckdir)
+assert meta["phase"] == 1, meta
+assert isinstance(tr2.state.tokens_seen, int)
+loader2.resume(tr2.state.tokens_seen)
+tr2.run(loader2)
+
+# re-save over the directory we just resumed from — the launcher's
+# save-at-end-of-resumed-run sequence: the save's entry barrier must
+# keep process 0 from clobbering the manifest while a slower peer is
+# still restoring (regression: gloo DEADLINE + FileNotFoundError)
+tr2.save_checkpoint(ckdir)
+resave_ok = os.path.isfile(os.path.join(ckdir, "manifest.json"))
+
+# -- cross-process one-writer-per-block save of a data-sharded array -- #
+from jax.sharding import NamedSharding, PartitionSpec as P
+sharded = jax.make_array_from_process_local_data(
+    NamedSharding(mesh, P("data", None)),
+    np.arange(12.0, dtype=np.float32).reshape(3, 4) + 100 * pid, (6, 4))
+sh_dir = ckdir + "-sharded"
+CKPT.save(sh_dir, {"x": sharded}, {"n": np.int32(0)}, step=0,
+          tokens_seen=0)
+# this process owns exactly ONE of x's two replica-0 blocks — the
+# other file can only have been written by the peer process
+my_writer_blocks = len(CKPT._writer_blocks(sharded))
+p_r, _, _ = CKPT.restore(
+    sh_dir, {"x": sharded}, {"n": np.int32(0)},
+    shardings=({"x": sharded.sharding},
+               {"n": NamedSharding(mesh, P())}))
+sharded_ok = all(
+    np.array_equal(np.asarray(a.data), np.asarray(b.data))
+    for a, b in zip(sharded.addressable_shards,
+                    p_r["x"].addressable_shards))
+
+rec = {"pid": pid, "nproc": jax.process_count(),
+       "steps_total": steps0 + len(tr2.history),
+       "max_transfer": max(transfers), "chunk": CHUNK,
+       "n_transfers": len(transfers),
+       "sharded_ok": bool(sharded_ok),
+       "resave_ok": bool(resave_ok),
+       "my_writer_blocks": my_writer_blocks,
+       "tokens_meta_int": isinstance(meta["tokens_seen"], int)}
+
+if pid == 0:
+    ref = np.load(refpath)
+    mine = host_params(tr2)
+    rec["n_leaves"] = len(mine)
+    rec["bitwise"] = all(
+        np.array_equal(ref[k], v) for k, v in zip(ref.files, mine))
+    man = json.load(open(os.path.join(ckdir, "manifest.json")))
+    rec["manifest_leaves"] = len(man["arrays"])
+    rec["files_exist"] = all(
+        os.path.isfile(os.path.join(ckdir, s["file"]))
+        for e in man["arrays"].values() for s in e["shards"])
+    man2 = json.load(open(os.path.join(sh_dir, "manifest.json")))
+    rec["x_shards"] = len(man2["arrays"]["p:x"]["shards"])
+    rec["x_files_exist"] = all(
+        os.path.isfile(os.path.join(sh_dir, s["file"]))
+        for s in man2["arrays"]["p:x"]["shards"])
+print(json.dumps(rec))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_two_process_ramp_checkpoint_resume_bitwise(run_multiprocess,
+                                                    run_subprocess,
+                                                    tmp_path):
+    ck = str(tmp_path / "ck")
+    ref = str(tmp_path / "ref.npz")
+    # reference: the identical mesh/workload in ONE process (2 forced
+    # host devices) — "the single-process run" of the acceptance
+    # criterion
+    rec = run_subprocess(SCRIPT, 0, 1, 0, "ref", ck, ref, devices=2,
+                         timeout=420)
+    assert rec["n_devices"] == 2 and rec["steps"] > 0
+
+    rec = run_multiprocess(SCRIPT, "dist", ck, ref, nprocs=2,
+                           devices=1, timeout=540)
+    assert rec["nproc"] == 2
+    assert rec["bitwise"], rec
+    assert rec["tokens_meta_int"]
+    assert rec["resave_ok"]
+    # bounded streaming: no single device→host transfer above the
+    # 4 KiB chunk (leaf rows here are far smaller than the chunk)
+    assert rec["max_transfer"] <= rec["chunk"], rec
+    assert rec["n_transfers"] > rec["manifest_leaves"]
+    # manifest complete and every named shard file really on disk
+    assert rec["files_exist"]
+    # the data-sharded save: each process wrote exactly its one
+    # replica-0 block, yet both files exist and reassemble bitwise —
+    # the one-writer-per-block protocol worked cross-process
+    assert rec["sharded_ok"]
+    assert rec["my_writer_blocks"] == 1
+    assert rec["x_shards"] == 2 and rec["x_files_exist"], rec

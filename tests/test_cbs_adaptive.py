@@ -7,8 +7,8 @@ import pytest
 
 from repro.core import theory as T
 from repro.core.adaptive import AdaptiveSeesaw
-from repro.core.cbs import (NoiseScaleMonitor, exact_noise_scale,
-                            noise_scale_trajectory, noise_scale_two_point)
+from repro.core.cbs import (NoiseScaleMonitor, noise_scale_trajectory,
+                            noise_scale_two_point)
 
 
 class TestNoiseScale:

@@ -1,0 +1,266 @@
+"""The sharded streaming checkpoint format (PR 5), host level.
+
+Directory layout + manifest commit, bounded-memory streaming through
+the single ``_to_host`` choke point, exact-int ``tokens_seen``
+round-trips, overwrite of a stale checkpoint directory, and the
+legacy-migration path: a pre-PR-5 single-file ``.npz`` checkpoint
+(float ``tokens_seen`` included) restores through the new restore
+code, both directly and via ``Trainer.restore_checkpoint``.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.models import registry as R
+from repro.optim import optimizers as O
+from repro.train import checkpoint as CKPT
+from repro.train.trainer import Trainer
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                   d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                   d_ff=128, vocab_size=128, max_seq_len=64,
+                   rope_theta=1e4)
+
+
+def _cfg(kind="seesaw", steps=24):
+    return RunConfig(
+        model=TINY,
+        schedule=ScheduleConfig(kind=kind, base_lr=1e-3, alpha=2.0,
+                                n_cuts=2),
+        optimizer=OptimizerConfig(kind="adamw"),
+        seq_len=32, global_batch_size=8,
+        total_tokens=32 * 8 * steps, remat=False, dtype="float32")
+
+
+def _state():
+    params = R.init_params(jax.random.PRNGKey(0), TINY)
+    opt = O.adamw()
+    return params, opt.init(params)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert np.dtype(x.dtype) == np.dtype(y.dtype)
+
+
+class TestDirectoryFormat:
+    def test_layout_and_roundtrip(self, tmp_path):
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=3, tokens_seen=768)
+        assert os.path.isfile(os.path.join(base, "manifest.json"))
+        assert os.path.isfile(os.path.join(base, "meta.json"))
+        with open(os.path.join(base, "manifest.json")) as f:
+            manifest = json.load(f)
+        # every leaf indexed, every shard file on disk, one file per
+        # block (single device: one block per leaf)
+        n_leaves = len(jax.tree.leaves(params)) + len(jax.tree.leaves(st))
+        assert len(manifest["arrays"]) == n_leaves
+        for entry in manifest["arrays"].values():
+            assert len(entry["shards"]) == 1
+            assert os.path.isfile(os.path.join(base,
+                                               entry["shards"][0]["file"]))
+        p2, s2, meta = CKPT.restore(base, params, st)
+        assert meta["step"] == 3 and meta["tokens_seen"] == 768
+        _assert_trees_equal(params, p2)
+        _assert_trees_equal(st, s2)
+
+    def test_npz_suffix_is_stripped(self, tmp_path):
+        """``--checkpoint ck.npz`` keeps working: the directory lands
+        at the stripped base and restore accepts either name."""
+        params, st = _state()
+        path = str(tmp_path / "ck.npz")
+        CKPT.save(path, params, st, step=1, tokens_seen=0)
+        assert os.path.isdir(str(tmp_path / "ck"))
+        p2, _, _ = CKPT.restore(path, params, st)
+        _assert_trees_equal(params, p2)
+
+    def test_tokens_seen_int_exact_past_2_53(self, tmp_path):
+        """JSON ints are arbitrary precision: a token count no float64
+        can represent round-trips exactly."""
+        params, st = _state()
+        big = 2 ** 53 + 1
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=9, tokens_seen=big)
+        _, _, meta = CKPT.restore(base, params, st)
+        assert meta["tokens_seen"] == big
+        assert isinstance(meta["tokens_seen"], int)
+        # the trainer-side conversion must not round through float64
+        assert CKPT.exact_tokens(meta["tokens_seen"]) == big
+        assert CKPT.exact_tokens(2816.0) == 2816
+
+    def test_overwrite_replaces_generation(self, tmp_path):
+        """A second save commits a new generation and garbage-collects
+        the superseded one — exactly one generation dir survives."""
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=1, tokens_seen=10)
+        assert os.listdir(os.path.join(base, "arrays")) == ["0"]
+        params2 = jax.tree.map(lambda x: x + 1, params)
+        CKPT.save(base, params2, st, step=2, tokens_seen=20)
+        assert os.listdir(os.path.join(base, "arrays")) == ["1"]
+        p2, _, meta = CKPT.restore(base, params, st)
+        assert meta["step"] == 2
+        _assert_trees_equal(params2, p2)
+
+    def test_interrupted_save_keeps_previous_checkpoint(self, tmp_path,
+                                                        monkeypatch):
+        """A save killed mid-stream must leave the previously
+        committed checkpoint fully restorable (the new generation
+        never commits), and the next successful save must clean the
+        orphaned partial generation."""
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=1, tokens_seen=10)
+
+        calls = {"n": 0}
+        orig = CKPT._stream_write
+
+        def dying(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] > 3:
+                raise RuntimeError("simulated preemption")
+            return orig(*a, **kw)
+
+        monkeypatch.setattr(CKPT, "_stream_write", dying)
+        params2 = jax.tree.map(lambda x: x + 1, params)
+        with pytest.raises(RuntimeError, match="preemption"):
+            CKPT.save(base, params2, st, step=2, tokens_seen=20)
+        monkeypatch.setattr(CKPT, "_stream_write", orig)
+
+        p1, _, meta = CKPT.restore(base, params, st)
+        assert meta["step"] == 1                  # old commit intact
+        _assert_trees_equal(params, p1)
+        # partial generation 1 on disk, ignored by restore; the next
+        # save reuses the number after GC and commits cleanly
+        CKPT.save(base, params2, st, step=3, tokens_seen=30)
+        assert os.listdir(os.path.join(base, "arrays")) == ["1"]
+        p2, _, meta = CKPT.restore(base, params, st)
+        assert meta["step"] == 3
+        _assert_trees_equal(params2, p2)
+
+    def test_missing_checkpoint_raises(self, tmp_path):
+        params, st = _state()
+        with pytest.raises(FileNotFoundError, match="manifest"):
+            CKPT.restore(str(tmp_path / "nope"), params, st)
+
+
+class TestBoundedStreaming:
+    def test_save_never_fetches_more_than_chunk(self, tmp_path,
+                                                monkeypatch):
+        """Every device→host transfer of the save path goes through
+        ``_to_host`` and moves at most ``chunk_bytes`` — the property
+        that makes the format work for >RAM params."""
+        params, st = _state()
+        sizes = []
+        orig = CKPT._to_host
+
+        def spy(x):
+            out = orig(x)
+            sizes.append(out.nbytes)
+            return out
+
+        monkeypatch.setattr(CKPT, "_to_host", spy)
+        chunk = 1 << 12
+        CKPT.save(str(tmp_path / "ck"), params, st, step=0,
+                  tokens_seen=0, chunk_bytes=chunk)
+        leaves = jax.tree.leaves(params) + jax.tree.leaves(st)
+        assert sizes, "no transfers recorded"
+        assert max(sizes) <= chunk
+        # and the big embedding leaf really was split across calls
+        total = sum(x.nbytes for x in leaves)
+        assert len(sizes) > len(leaves)
+        assert sum(sizes) == total
+
+    def test_chunked_write_is_bitwise(self, tmp_path):
+        params, st = _state()
+        CKPT.save(str(tmp_path / "a"), params, st, step=0, tokens_seen=0,
+                  chunk_bytes=1 << 10)
+        CKPT.save(str(tmp_path / "b"), params, st, step=0, tokens_seen=0)
+        pa, sa, _ = CKPT.restore(str(tmp_path / "a"), params, st)
+        pb, sb, _ = CKPT.restore(str(tmp_path / "b"), params, st)
+        _assert_trees_equal(pa, pb)
+        _assert_trees_equal(sa, sb)
+
+
+class TestLegacyMigration:
+    def test_legacy_npz_restores_through_new_path(self, tmp_path):
+        params, st = _state()
+        base = str(tmp_path / "old")
+        CKPT.save_npz(base, params, st, step=11, tokens_seen=2816.0)
+        assert os.path.isfile(base + ".npz")     # true single-file layout
+        p2, s2, meta = CKPT.restore(base, params, st)
+        assert meta["step"] == 11
+        assert meta["tokens_seen"] == 2816.0       # float preserved
+        _assert_trees_equal(params, p2)
+        _assert_trees_equal(st, s2)
+
+    def test_trainer_resumes_from_pre_pr5_float_checkpoint(self,
+                                                           tmp_path):
+        """A mid-ramp checkpoint written by the pre-PR-5 writer (one
+        .npz, float ``tokens_seen``) resumes through
+        ``Trainer.restore_checkpoint`` and continues the uninterrupted
+        trajectory bitwise."""
+        cfg = _cfg(kind="seesaw")
+        src = MarkovLM(128, seed=0)
+        full = Trainer(cfg)
+        full.run(PhaseDataLoader(src, full.plan, 32))
+
+        mid = full.plan.steps_per_phase(32)[0] + 1
+        tr = Trainer(cfg)
+        tr.run(PhaseDataLoader(src, tr.plan, 32), max_steps=mid)
+        path = str(tmp_path / "old.npz")
+        # the exact pre-PR-5 on-disk state: float tokens_seen + the
+        # phase metadata save_phase_checkpoint has always recorded
+        ph = tr.plan.realized_phase_at(tr.state.tokens_seen, 32)
+        CKPT.save_npz(path, tr.state.params, tr.state.opt_state,
+                      tr.state.step, float(tr.state.tokens_seen),
+                      extra={"phase": ph.index,
+                             "batch_size": ph.batch_size,
+                             "schedule_kind": tr.plan.kind,
+                             "total_tokens": tr.plan.total_tokens})
+
+        tr2 = Trainer(cfg)
+        meta = tr2.restore_checkpoint(path)
+        assert isinstance(tr2.state.tokens_seen, int)
+        assert meta["phase"] == 1
+        loader = PhaseDataLoader(src, tr2.plan, 32).resume(
+            tr2.state.tokens_seen)
+        tr2.run(loader)
+        ref = full.history[mid:]
+        assert len(tr2.history) == len(ref)
+        for a, b in zip(ref, tr2.history):
+            assert a["step"] == b["step"]
+            assert a["lr"] == b["lr"]
+            np.testing.assert_array_equal(a["loss"], b["loss"])
+        _assert_trees_equal(full.state.params, tr2.state.params)
+
+    def test_new_save_retires_legacy_file(self, tmp_path):
+        """Re-saving over a legacy path replaces it with the sharded
+        directory AND removes the stale .npz — otherwise a later save
+        interrupted mid-write would leave restore silently falling
+        back to a months-old checkpoint."""
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save_npz(base, params, st, step=1, tokens_seen=32.0)
+        params2 = jax.tree.map(lambda x: x * 2, params)
+        CKPT.save(base, params2, st, step=2, tokens_seen=64)
+        assert not os.path.exists(base + ".npz")
+        assert not os.path.exists(base + ".meta.json")
+        p2, _, meta = CKPT.restore(base, params, st)
+        assert meta["step"] == 2
+        _assert_trees_equal(params2, p2)
+        # an interrupted NEXT save (manifest invalidated, no commit)
+        # must now fail loudly, not resurrect stale state
+        os.remove(os.path.join(base, "manifest.json"))
+        with pytest.raises(FileNotFoundError):
+            CKPT.restore(base, params, st)

@@ -1,0 +1,74 @@
+"""Per-host row-block layout assertion (``launch.mesh``).
+
+The pure check behind ``assert_per_host_row_blocks`` is exercised with
+synthetic device→slice layouts (a real multi-process mesh cannot be
+built in the single-process fast tier; the 2-process launch test
+drives the full path): contiguous process-ordered blocks pass,
+interleaved/permuted/indivisible layouts raise.
+"""
+from dataclasses import dataclass
+
+import pytest
+
+from repro.launch.mesh import (_row_blocks_by_process,
+                               check_per_host_row_blocks,
+                               data_parallel_size)
+
+
+@dataclass(frozen=True)
+class FakeDev:
+    process_index: int
+    did: int = 0
+
+
+def _imap(assignments):
+    """{(process, slice start, stop)} → devices_indices_map shape."""
+    return {FakeDev(p, i): (slice(a, b),)
+            for i, (p, a, b) in enumerate(assignments)}
+
+
+class TestRowBlockCheck:
+    def test_contiguous_process_order_passes(self):
+        per = _row_blocks_by_process(
+            _imap([(0, 0, 2), (0, 2, 4), (1, 4, 6), (1, 6, 8)]), 8)
+        check_per_host_row_blocks(per, 8, 2)
+
+    def test_single_process_owns_everything(self):
+        per = _row_blocks_by_process(_imap([(0, 0, 4)]), 4)
+        check_per_host_row_blocks(per, 4, 1)
+
+    def test_interleaved_rows_rejected(self):
+        """A custom mesh whose device order interleaves processes
+        along the data axis would silently feed wrong rows."""
+        per = _row_blocks_by_process(
+            _imap([(0, 0, 1), (1, 1, 2), (0, 2, 3), (1, 3, 4)]), 4)
+        with pytest.raises(ValueError, match="contiguous block"):
+            check_per_host_row_blocks(per, 4, 2)
+
+    def test_process_order_swap_rejected(self):
+        """Contiguous blocks in the wrong process order are just as
+        wrong: process 0 would sample rows process 1's devices own."""
+        per = _row_blocks_by_process(
+            _imap([(1, 0, 2), (0, 2, 4)]), 4)
+        with pytest.raises(ValueError, match="process order"):
+            check_per_host_row_blocks(per, 4, 2)
+
+    def test_indivisible_width_rejected(self):
+        per = _row_blocks_by_process(_imap([(0, 0, 3)]), 3)
+        with pytest.raises(ValueError, match="does not divide"):
+            check_per_host_row_blocks(per, 3, 2)
+
+    def test_full_slice_normalized(self):
+        """slice(None) entries (replicated specs) count as the whole
+        axis."""
+        per = _row_blocks_by_process(
+            {FakeDev(0): (slice(None),)}, 4)
+        assert per == {0: {0, 1, 2, 3}}
+
+
+class TestDataParallelSize:
+    def test_mesh_shapes(self):
+        class M:
+            shape = {"data": 4, "model": 2}
+        assert data_parallel_size(M()) == 4
+        assert data_parallel_size(None) == 1

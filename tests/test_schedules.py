@@ -1,7 +1,5 @@
 import math
 
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import schedules as S
