@@ -1,0 +1,234 @@
+"""Checkpoint stall benchmark: synchronous save wall time vs the
+step-loop stall of an async ``CheckpointManager.request_save``.
+
+A synchronous save blocks the training loop for the full
+device→host-stream→fsync→commit round-trip.  The async path only
+blocks for the on-device snapshot (a jitted ``jnp.copy`` of the state
+tree, donation-safe) plus the thread handoff — the streaming and the
+manifest commit happen on the writer thread while the next fused
+chunks dispatch.  This bench measures both on the 150M smoke config
+(``SEESAW_150M.reduced()``, the same workload bench_engine times) and
+reports the ratio, which is the factor by which periodic
+checkpointing stops taxing step time.
+
+    PYTHONPATH=src python -m benchmarks.bench_checkpoint \
+        [--saves 5] [--out artifacts/bench_checkpoint.json] \
+        [--check-stall] [--check-schema]
+
+``--check-stall`` gates the ratio (async stall at least 5x smaller);
+``--check-schema`` instead round-trips one checkpoint and validates
+the on-disk manifest schema (format version, generation, meta fields,
+per-shard file/bounds/crc32/writer) plus crc integrity — the cheap CI
+artifact proving the format contract without timing noise.  Emits one
+JSON artifact plus the harness's ``name,us_per_call,derived`` CSV
+rows via ``run()``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import statistics
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import (OptimizerConfig, RunConfig, ScheduleConfig)
+from repro.configs.seesaw_paper import SEESAW_150M
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.train import checkpoint as CKPT
+from repro.train.trainer import Trainer
+
+SEQ = 64
+B0 = 2
+STEPS = 8
+
+
+def _trainer() -> Trainer:
+    model = SEESAW_150M.reduced()
+    cfg = RunConfig(
+        model=model,
+        schedule=ScheduleConfig(kind="cosine", base_lr=1e-3),
+        optimizer=OptimizerConfig(kind="adamw"),
+        seq_len=SEQ, global_batch_size=B0,
+        total_tokens=SEQ * B0 * STEPS, remat=False)
+    tr = Trainer(cfg, fuse_steps=4)
+    # a few real steps so the timed saves write converged-shape state
+    # (opt state populated, tokens_seen mid-run), not init noise
+    tr.run(PhaseDataLoader(MarkovLM(min(model.vocab_size, 2048),
+                                    seed=0), tr.plan, SEQ))
+    return tr
+
+
+def _bench_stalls(tr: Trainer, workdir: str, saves: int):
+    st = tr.state
+    sync_s, async_s = [], []
+    sync_dir = os.path.join(workdir, "sync")
+    for i in range(saves):
+        shutil.rmtree(sync_dir, ignore_errors=True)
+        t0 = time.perf_counter()
+        CKPT.save_phase_checkpoint(sync_dir, st.params, st.opt_state,
+                                   st.step, st.tokens_seen,
+                                   plan=tr.plan,
+                                   seq_len=tr.cfg.seq_len)
+        sync_s.append(time.perf_counter() - t0)
+
+    mgr = tr.engine.make_checkpoint_manager()
+    async_dir = os.path.join(workdir, "async")
+    for i in range(saves):
+        t0 = time.perf_counter()
+        mgr.request_save(async_dir, st.params, st.opt_state,
+                         st.step + i, st.tokens_seen)
+        async_s.append(time.perf_counter() - t0)
+        mgr.wait()               # not timed: drain before next request
+    mgr.finalize()
+    assert mgr.saves_committed >= 1
+    return statistics.median(sync_s), statistics.median(async_s)
+
+
+def _measure(saves: int = 5):
+    tr = _trainer()
+    workdir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        stall_sync, stall_async = _bench_stalls(tr, workdir, saves)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    ratio = stall_sync / max(stall_async, 1e-9)
+    n_bytes = sum(x.nbytes for x in
+                  jax.tree.leaves(tr.state.params)
+                  + jax.tree.leaves(tr.state.opt_state))
+    result = {"model": tr.cfg.model.name, "state_bytes": n_bytes,
+              "saves": saves,
+              "stall_sync_s": round(stall_sync, 4),
+              "stall_async_s": round(stall_async, 4),
+              "ratio": round(ratio, 2)}
+    rows = [("checkpoint/stall_sync", 1e6 * stall_sync,
+             f"state_mb={n_bytes / 1e6:.1f}"),
+            ("checkpoint/stall_async", 1e6 * stall_async,
+             f"ratio_vs_sync={ratio:.1f}x")]
+    return rows, result
+
+
+def run(saves: int = 5):
+    """Harness entry point (``python -m benchmarks.run``): CSV rows."""
+    rows, _ = _measure(saves)
+    return rows
+
+
+def check_stall(result) -> list:
+    """CI gate: the async request must stall the step loop at least
+    5x less than a blocking save of the same state."""
+    if result["ratio"] < 5.0:
+        return [f"async stall ratio {result['ratio']}x < 5x "
+                f"(sync {result['stall_sync_s']}s, "
+                f"async {result['stall_async_s']}s)"]
+    return []
+
+
+def check_schema() -> list:
+    """Round-trip one checkpoint of the smoke state and validate the
+    on-disk contract: manifest format/generation, meta fields the
+    resume path depends on, per-shard file/bounds/crc32/writer entries,
+    crc integrity of every block, and a bitwise restore."""
+    errors = []
+    tr = _trainer()
+    workdir = tempfile.mkdtemp(prefix="bench_ckpt_schema_")
+    base = os.path.join(workdir, "ck")
+    st = tr.state
+    try:
+        CKPT.save_phase_checkpoint(base, st.params, st.opt_state,
+                                   st.step, st.tokens_seen,
+                                   plan=tr.plan,
+                                   seq_len=tr.cfg.seq_len)
+        with open(os.path.join(base, "manifest.json")) as f:
+            man = json.load(f)
+        if man.get("format") != CKPT.FORMAT_VERSION:
+            errors.append(f"format {man.get('format')} != "
+                          f"{CKPT.FORMAT_VERSION}")
+        if man.get("generation") != 0:
+            errors.append(f"first generation {man.get('generation')}")
+        meta = man.get("meta", {})
+        for key in ("step", "tokens_seen", "phase", "batch_size",
+                    "save_process_count"):
+            if key not in meta:
+                errors.append(f"meta missing {key!r}")
+        n_leaves = len(jax.tree.leaves(st.params)) \
+            + len(jax.tree.leaves(st.opt_state))
+        if len(man.get("arrays", {})) != n_leaves:
+            errors.append(f"{len(man.get('arrays', {}))} manifest "
+                          f"leaves != {n_leaves} state leaves")
+        for name, entry in man.get("arrays", {}).items():
+            for field in ("shape", "dtype", "shards"):
+                if field not in entry:
+                    errors.append(f"{name}: missing {field!r}")
+            for shard in entry.get("shards", []):
+                for field in ("file", "start", "stop", "crc32",
+                              "writer"):
+                    if field not in shard:
+                        errors.append(f"{name}: shard missing "
+                                      f"{field!r}")
+                path = os.path.join(base, shard.get("file", ""))
+                if not os.path.isfile(path):
+                    errors.append(f"{name}: {shard.get('file')} "
+                                  f"missing on disk")
+                elif CKPT._crc_of_file(path) != shard.get("crc32"):
+                    errors.append(f"{name}: crc mismatch on "
+                                  f"{shard.get('file')}")
+        p2, o2, meta2 = CKPT.restore(base, st.params, st.opt_state,
+                                     verify=True)
+        for a, b in zip(jax.tree.leaves(st.params),
+                        jax.tree.leaves(p2)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                errors.append("restored params not bitwise")
+                break
+        if CKPT.exact_tokens(meta2["tokens_seen"]) != st.tokens_seen:
+            errors.append("tokens_seen did not round-trip")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--saves", type=int, default=5)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--check-stall", action="store_true")
+    ap.add_argument("--check-schema", action="store_true")
+    args = ap.parse_args()
+
+    if args.check_schema:
+        errors = check_schema()
+        result = {"schema_ok": not errors, "errors": errors}
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".",
+                        exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(result, f, indent=2, sort_keys=True)
+            print(f"wrote {args.out}")
+        if errors:
+            raise SystemExit("schema check failed:\n  "
+                             + "\n  ".join(errors))
+        print("schema check passed")
+        return
+
+    rows, result = _measure(args.saves)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    if args.check_stall:
+        errors = check_stall(result)
+        if errors:
+            raise SystemExit("stall check failed:\n  "
+                             + "\n  ".join(errors))
+        print(f"stall check passed: {result['ratio']}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -59,23 +59,34 @@ _DONE = object()
 
 
 def validate_per_host_plan(plan: SeesawPlan, process_count: int,
-                           n_data_devices: int = 1) -> SeesawPlan:
+                           n_data_devices: int = 1, *,
+                           start_phase: int = 0) -> SeesawPlan:
     """Check the per-host shard divides evenly across the whole ramp.
 
     Every phase's global batch must split into ``process_count`` equal
     per-process blocks, and still shard over all ``n_data_devices``
     data-parallel devices — a ramp that only divides in its early
     phases would crash mid-run, so this is validated up front (launch
-    wiring and the dry-run both call it)."""
+    wiring and the dry-run both call it).  An elastic resume passes
+    ``start_phase``: phases the checkpoint already consumed are skipped
+    — the NEW topology only has to feed the remainder of the ramp, and
+    a ramp stage it cannot feed is reported against the resume point,
+    not a phase the run will never revisit."""
+    suffix = (f" (resuming at phase {start_phase})"
+              if start_phase > 0 else "")
     for p in plan.phases:
+        if p.index < start_phase:
+            continue
         if p.batch_size % max(process_count, 1):
             raise ValueError(
                 f"phase {p.index}: global batch {p.batch_size} does "
-                f"not divide across {process_count} host processes")
+                f"not divide across {process_count} host "
+                f"processes{suffix}")
         if n_data_devices and p.batch_size % n_data_devices:
             raise ValueError(
                 f"phase {p.index}: global batch {p.batch_size} does "
-                f"not divide across {n_data_devices} data devices")
+                f"not divide across {n_data_devices} data "
+                f"devices{suffix}")
     return plan
 
 
@@ -96,7 +107,8 @@ class PhaseDataLoader:
                  mesh=None, multi_pod: bool = False, prefetch: int = 2,
                  per_host: bool = False,
                  process_index: Optional[int] = None,
-                 process_count: Optional[int] = None):
+                 process_count: Optional[int] = None,
+                 validate: bool = True):
         self.source = source
         self.plan = plan
         self.seq_len = seq_len
@@ -108,7 +120,11 @@ class PhaseDataLoader:
             self._pcount = process_count or jax.process_count()
             self._pidx = (jax.process_index() if process_index is None
                           else process_index)
-            validate_per_host_plan(plan, self._pcount)
+            # validate=False defers the whole-ramp check to resume():
+            # an elastic resume onto a new topology must not fail on a
+            # phase the checkpoint already consumed
+            if validate:
+                validate_per_host_plan(plan, self._pcount)
             if not 0 <= self._pidx < self._pcount:
                 raise ValueError(
                     f"process_index {self._pidx} outside "
@@ -154,8 +170,15 @@ class PhaseDataLoader:
         return len(steps), 0, cursor
 
     def resume(self, tokens_seen) -> "PhaseDataLoader":
-        """Reposition the stream to continue a checkpointed run."""
+        """Reposition the stream to continue a checkpointed run.  The
+        remainder of the ramp is (re-)validated against THIS loader's
+        topology from the resumed phase on — the elastic-resume check:
+        the new process count need not match the saving one, but it
+        must be able to feed every phase still ahead."""
         self._start = self.position_at(tokens_seen)
+        if self.per_host:
+            validate_per_host_plan(self.plan, self._pcount,
+                                   start_phase=self._start[0])
         return self
 
     # -- sharding -------------------------------------------------------- #

@@ -92,6 +92,22 @@ def assert_per_host_row_blocks(mesh, process_count: int | None = None):
     check_per_host_row_blocks(per, n, nproc)
 
 
+def make_launch_mesh(spec: str | None, *, distributed: bool = False):
+    """The launcher's mesh from a ``--mesh`` spec ("DxM" data x model,
+    or "PxDxM" pod x data x model), or the default multi-process
+    topology — pure data parallelism over every global device — when
+    ``distributed`` and no spec.  ``None`` (single-process, no spec)
+    keeps the mesh-less fast path."""
+    if spec:
+        dims = [int(x) for x in spec.split("x")]
+        names = ("data", "model")[:len(dims)] if len(dims) == 2 \
+            else ("pod", "data", "model")
+        return jax.make_mesh(tuple(dims), names)
+    if distributed:
+        return jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    return None
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -29,13 +29,22 @@ LONG_CONTEXT_ARCHS = {"recurrentgemma-9b", "mamba2-2.7b", "starcoder2-3b"}
 _named = named_shardings        # legacy name used by dryrun and tests
 
 
-def validate_feeding(plan, mesh, *, process_count: int | None = None):
+def validate_feeding(plan, mesh, *, process_count: int | None = None,
+                     start_tokens=None, seq_len: int | None = None):
     """Dry-run/launch check that a plan's batch ramp is feedable on
     this topology: every phase's global batch must divide across the
     host processes (per-host data feeding) and across the mesh's
     data-parallel devices, and each process must own a contiguous,
     process-ordered row block of the data axes (asserted from the
-    actual ``NamedSharding``, so custom meshes are covered).  Raises
+    actual ``NamedSharding``, so custom meshes are covered).
+
+    ``start_tokens`` (a checkpoint's exact ``tokens_seen``) turns this
+    into the *elastic-resume* check: only the ramp from the phase that
+    token count lands in onward must be feedable — the new topology
+    may differ from the saving one, and phases the checkpoint already
+    consumed don't constrain it.  With ``seq_len`` the phase is looked
+    up on the realized (step-quantized) boundaries the loader uses;
+    without it, on the plan's ideal token boundaries.  Raises
     ``ValueError`` on the first violation; returns the plan
     otherwise."""
     from repro.data.pipeline import validate_per_host_plan
@@ -45,8 +54,16 @@ def validate_feeding(plan, mesh, *, process_count: int | None = None):
         else process_count
     if mesh is not None:
         assert_per_host_row_blocks(mesh, n_proc)
+    start_phase = 0
+    if start_tokens is not None:
+        from repro.train.checkpoint import exact_tokens
+        tok = exact_tokens(start_tokens)
+        ph = (plan.realized_phase_at(tok, seq_len) if seq_len
+              else plan.phase_at_tokens(tok))
+        start_phase = ph.index
     return validate_per_host_plan(plan, n_proc,
-                                  data_parallel_size(mesh))
+                                  data_parallel_size(mesh),
+                                  start_phase=start_phase)
 
 
 def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:

@@ -1,4 +1,4 @@
-"""Sharded, streaming checkpoints for multi-process runs.
+"""Sharded, streaming, async-capable checkpoints for multi-process runs.
 
 A checkpoint is a **directory** (``path`` with any trailing ``.npz``
 stripped)::
@@ -10,52 +10,86 @@ stripped)::
       meta.json         # informational sidecar copy of the meta
       arrays/<gen>/     # one .npy per distinct global block of each
         00042.0.npy     # leaf: <leaf index in sorted key order>.<block>
+      .save-<gen>.<p>.json   # transient per-process completion marker
+                             # (block checksums), removed at commit
 
-Each process writes only the blocks for which it holds the
-``replica_id == 0`` addressable shard, so every block is written exactly
-once globally and no process ever fetches replicas it does not own.
-Device->host transfers go through :func:`_to_host` in ``chunk_bytes``
-slices, so saving works for params larger than host RAM (bounded
-memory per transfer).  Process 0 commits the manifest after a
-cross-process barrier, so a manifest on disk implies every shard file
-it names is complete — and because each save streams into a fresh
-``arrays/<generation>/`` and the previous generation is deleted only
-after the commit, a save killed at ANY point leaves the last committed
-checkpoint fully restorable.
+Each global block of every leaf is written by exactly one process —
+assigned **round-robin across every process that holds an addressable
+copy of the block** (any replica, replicas are bitwise-identical), so
+replicated and model-parallel-sharded state spreads its write bandwidth
+over all hosts instead of bottlenecking the data-row-0 process.  The
+assignment is derived from the global ``devices_indices_map`` on every
+process identically, recorded in the manifest (``"writer"``), and needs
+no communication.  Device->host transfers go through :func:`_to_host`
+in ``chunk_bytes`` slices, so saving works for params larger than host
+RAM; each block's crc32 is accumulated during the stream and lands in
+the manifest for ``restore(..., verify=True)``.
+
+Commit protocol: every process streams its blocks into a fresh
+``arrays/<generation>/`` and then drops an atomic marker file carrying
+its checksums; process 0 merges the markers, commits the manifest in a
+single ``os.replace``, and only then garbage-collects the previous
+generation.  A save killed at ANY point — including one process dying
+mid-save — leaves the last committed checkpoint fully restorable, and
+the survivors surface a :class:`CheckpointTimeoutError` instead of
+hanging.  The synchronous :func:`save` wraps the same steps in
+cross-process barriers; :class:`CheckpointManager` runs the streaming
+and commit from a background thread (no jax collectives off the main
+thread) so the step loop is blocked only for the on-device snapshot.
 
 Restore is the mirror image: every process reads only the block its
 target sharding makes addressable (shard files are memory-mapped, so a
 block read touches only the bytes it needs) and the global array is
-reassembled with ``jax.make_array_from_process_local_data``.  Legacy
-pre-PR-5 single-file ``<base>.npz`` checkpoints (see :func:`save_npz`)
-restore through the same path, including float ``tokens_seen`` metadata
-from before the exact-integer change.
+reassembled with ``jax.make_array_from_process_local_data``.  The
+on-disk format is **topology-independent**: a checkpoint saved on N
+processes restores onto M processes or a different mesh shape (elastic
+resume) — only the *feeding* side needs re-validation, see
+``launch.steps.validate_feeding(start_tokens=...)``.  Legacy pre-PR-5
+single-file ``<base>.npz`` checkpoints (see :func:`save_npz`) restore
+through the same path, including float ``tokens_seen`` metadata from
+before the exact-integer change (non-integral values now warn instead
+of silently rounding).
 
 Phase-aware save/resume: ``save_phase_checkpoint`` records the plan
 position (phase index, batch size, schedule kind) next to
 ``tokens_seen``; ``restore_phase_checkpoint`` validates that the
 restoring run's plan lands the same token count in the same phase, so
 the engine resumes with the correct compiled step (batch size) and the
-device-side LR curve picks up exactly where it left off.
-
-``tokens_seen`` round-trips losslessly: the trainer passes an exact
-Python int and JSON preserves arbitrary-precision integers, so a
-resumed run continues from the exact token count however long the run
-(pre-integer float checkpoints still restore -- the trainer rounds)."""
+device-side LR curve picks up exactly where it left off."""
 from __future__ import annotations
 
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+import threading
+import time
+import warnings
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2                     # v2 adds writer + crc32 per block
 DEFAULT_CHUNK_BYTES = 1 << 24          # 16 MiB per device->host slice
+DEFAULT_COMMIT_TIMEOUT = 600.0         # s to wait on peers before failing
 
 Block = Tuple[Tuple[int, int], ...]    # ((start, stop), ...) per dim
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """A shard file's content does not match its manifest checksum."""
+
+
+class CheckpointTimeoutError(CheckpointError):
+    """A peer process never finished its part of a save — it likely
+    died mid-save.  The previously committed generation is intact."""
 
 
 def _to_host(x) -> np.ndarray:
@@ -104,12 +138,19 @@ def _unflatten(template, flat: Dict[str, Any], prefix=""):
     return flat[prefix.rstrip("/")]
 
 
+def _flat_state(params, opt_state) -> Dict[str, Any]:
+    flat: Dict[str, Any] = {}
+    flat.update({f"p:{k}": v for k, v in _flatten(params).items()})
+    flat.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+    return flat
+
+
 def _base(path: str) -> str:
     return path[:-4] if path.endswith(".npz") else path
 
 
 # --------------------------------------------------------------------- #
-# block geometry
+# block geometry + writer assignment
 # --------------------------------------------------------------------- #
 
 def _norm_index(idx, shape) -> Block:
@@ -132,63 +173,135 @@ def _volume(block: Block) -> int:
 def _is_private(leaf) -> bool:
     """In a multi-process run, a fully-addressable array is a
     process-private replica (e.g. freshly-initialized state before the
-    first sharded step): every process holds an identical copy, so
-    process 0's is canonical and the others must not race to write."""
+    first sharded step): every process holds an identical copy, so any
+    one of them can serve as the writer."""
     return (jax.process_count() > 1
             and leaf.sharding.is_fully_addressable)
 
 
-def _global_blocks(leaf):
-    """(shape, dtype, ordered distinct global blocks) for a leaf —
+def _block_table(leaf):
+    """(shape, dtype, ordered distinct global blocks, {block: sorted
+    process indices holding an addressable copy of it}) for a leaf —
     identical on every process (``devices_indices_map`` is global
-    topology), which is what lets process 0 write a manifest naming
-    files other processes produced."""
+    topology), which is what lets the round-robin writer assignment be
+    agreed without communication and lets process 0 write a manifest
+    naming files other processes produced."""
+    all_procs = list(range(jax.process_count()))
     if isinstance(leaf, jax.Array):
         shape = tuple(leaf.shape)
         if _is_private(leaf):
-            return shape, np.dtype(leaf.dtype), [_full_block(shape)]
+            blk = _full_block(shape)
+            return shape, np.dtype(leaf.dtype), [blk], {blk: all_procs}
         imap = leaf.sharding.devices_indices_map(shape)
-        blocks = sorted({_norm_index(i, shape) for i in imap.values()})
-        return shape, np.dtype(leaf.dtype), blocks
+        holders: Dict[Block, set] = {}
+        for dev, idx in imap.items():
+            holders.setdefault(_norm_index(idx, shape),
+                               set()).add(dev.process_index)
+        blocks = sorted(holders)
+        return (shape, np.dtype(leaf.dtype), blocks,
+                {b: sorted(holders[b]) for b in blocks})
     arr = np.asarray(leaf)
-    return tuple(arr.shape), arr.dtype, [_full_block(arr.shape)]
+    blk = _full_block(arr.shape)
+    return tuple(arr.shape), arr.dtype, [blk], {blk: all_procs}
+
+
+def _local_blocks(leaf) -> Dict[Block, Any]:
+    """The shard data this process can serve, per block.  Any replica
+    works — replicas are bitwise-identical — so a process assigned a
+    block it holds only as replica k just streams that copy."""
+    if isinstance(leaf, jax.Array):
+        shape = tuple(leaf.shape)
+        if _is_private(leaf):
+            return {_full_block(shape): leaf}
+        out: Dict[Block, Any] = {}
+        for s in leaf.addressable_shards:
+            out.setdefault(_norm_index(s.index, shape), s.data)
+        return out
+    arr = np.asarray(leaf)
+    return {_full_block(arr.shape): arr}
+
+
+def _plan_writes(flat: Dict[str, Any], gen: int):
+    """(manifest ``arrays`` dict, [(shard entry, device data), ...] of
+    the blocks THIS process writes).  The writer of each block rotates
+    round-robin across the processes holding an addressable copy, over
+    all blocks in save order — so replicated state (every process a
+    candidate) and model-parallel-heavy meshes spread their write
+    bandwidth across all hosts instead of funnelling through the
+    data-row-0 process.  The assignment lands in the manifest."""
+    arrays: Dict[str, Any] = {}
+    mine: List[Tuple[Dict, Any]] = []
+    rr = 0
+    me = jax.process_index()
+    for li, (key, leaf) in enumerate(sorted(flat.items())):
+        shape, dtype, blocks, holders = _block_table(leaf)
+        local = _local_blocks(leaf)
+        shards = []
+        for j, blk in enumerate(blocks):
+            cands = holders[blk]
+            writer = cands[rr % len(cands)]
+            rr += 1
+            ent = {"file": _shard_file(gen, li, j),
+                   "start": [a for a, _ in blk],
+                   "stop": [b for _, b in blk],
+                   "writer": writer}
+            shards.append(ent)
+            if writer == me:
+                mine.append((ent, local[blk]))
+        arrays[key] = {"shape": list(shape), "dtype": dtype.name,
+                       "shards": shards}
+    return arrays, mine
 
 
 def _writer_blocks(leaf) -> Dict[Block, Any]:
-    """The blocks THIS process must write: its addressable
-    ``replica_id == 0`` shards (exactly one process owns replica 0 of
-    each block, so each file has a unique writer)."""
-    if isinstance(leaf, jax.Array):
-        shape = tuple(leaf.shape)
-        if _is_private(leaf):
-            return ({_full_block(shape): leaf}
-                    if jax.process_index() == 0 else {})
-        return {_norm_index(s.index, shape): s.data
-                for s in leaf.addressable_shards if s.replica_id == 0}
-    if jax.process_index() == 0:
-        arr = np.asarray(leaf)
-        return {_full_block(arr.shape): arr}
-    return {}
+    """Blocks THIS process would write for a single leaf (rotation
+    starting at 0) — kept for tests and introspection; the save path
+    plans the rotation across all leaves via :func:`_plan_writes`."""
+    shape, _, blocks, holders = _block_table(leaf)
+    local = _local_blocks(leaf)
+    me = jax.process_index()
+    return {blk: local[blk] for j, blk in enumerate(blocks)
+            if holders[blk][j % len(holders[blk])] == me}
 
 
-def _stream_write(path: str, data, chunk_bytes: int):
+def _stream_write(path: str, data, chunk_bytes: int) -> int:
     """Write one shard to a .npy file in bounded-memory slices: the
     shard is viewed flat and copied ``chunk_bytes`` at a time, so no
     single device→host transfer ever exceeds the chunk whatever the
-    shard's row shape (device arrays are sliced on device)."""
+    shard's row shape (device arrays are sliced on device).  Returns
+    the crc32 of the streamed bytes for the manifest."""
     shape = tuple(data.shape)
     dtype = np.dtype(data.dtype)
     mm = np.lib.format.open_memmap(path, mode="w+", dtype=dtype,
                                    shape=shape)
+    crc = 0
     try:
         flat = mm.reshape(-1)             # writes through to the file
         src = data.reshape(-1)
         elems = max(1, int(chunk_bytes) // max(dtype.itemsize, 1))
         for i in range(0, flat.shape[0], elems):
-            flat[i:i + elems] = _to_host(src[i:i + elems])
+            h = _to_host(src[i:i + elems])
+            flat[i:i + elems] = h
+            crc = zlib.crc32(np.ascontiguousarray(h).tobytes(), crc)
         mm.flush()
     finally:
         del mm
+    return crc
+
+
+def _crc_of_file(path: str,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> int:
+    """crc32 of a shard file's array content, read in bounded slices
+    (memory-mapped — verification never loads a whole block)."""
+    arr = np.load(path, mmap_mode="r")
+    flat = np.asarray(arr).reshape(-1) if arr.ndim == 0 \
+        else arr.reshape(-1)
+    crc = 0
+    elems = max(1, int(chunk_bytes) // max(flat.dtype.itemsize, 1))
+    for i in range(0, flat.shape[0], elems):
+        crc = zlib.crc32(
+            np.ascontiguousarray(flat[i:i + elems]).tobytes(), crc)
+    return crc
 
 
 def _shard_file(gen: int, leaf_i: int, block_j: int) -> str:
@@ -208,29 +321,99 @@ def _committed_generation(base: str) -> int:
 
 
 # --------------------------------------------------------------------- #
-# save
+# commit coordination (marker files)
 # --------------------------------------------------------------------- #
 
-def save(path: str, params, opt_state, step: int, tokens_seen: int,
-         extra: Optional[Dict[str, Any]] = None, *,
-         chunk_bytes: int = DEFAULT_CHUNK_BYTES):
-    """Write a sharded streaming checkpoint directory at ``path`` (any
-    trailing ``.npz`` is stripped — the name stays launcher-compatible).
-    Safe to call from every process of a multi-process run; collective
-    (all processes must call it).
+def _marker_path(base: str, gen: int, pid: int) -> str:
+    return os.path.join(base, f".save-{gen}.{pid}.json")
 
-    Crash-safe: shards stream into a fresh ``arrays/<generation>/``
-    while the previous generation and its manifest stay untouched, and
-    the new manifest lands in one ``os.replace`` — a save killed at
-    any point leaves the last committed checkpoint fully restorable
-    (uncommitted generations are garbage-collected by the next
-    save)."""
-    base = _base(path)
-    parent = os.path.dirname(base)
-    flat = {}
-    flat.update({f"p:{k}": v for k, v in _flatten(params).items()})
-    flat.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
 
+def _write_marker(base: str, gen: int, pid: int,
+                  crcs: Dict[str, int]):
+    """Atomically drop this process's completion marker: its shards
+    are fully on disk, with these checksums."""
+    path = _marker_path(base, gen, pid)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"process": pid, "crc32": crcs}, f)
+    os.replace(tmp, path)
+
+
+def _clear_markers(base: str):
+    try:
+        entries = os.listdir(base)
+    except FileNotFoundError:
+        return
+    for name in entries:
+        if name.startswith(".save-"):
+            try:
+                os.remove(os.path.join(base, name))
+            except OSError:
+                pass
+
+
+def _apply_crcs(manifest: Dict, crcs: Dict[str, int]):
+    for entry in manifest["arrays"].values():
+        for sh in entry["shards"]:
+            if sh["file"] in crcs:
+                sh["crc32"] = crcs[sh["file"]]
+
+
+def _merge_markers(base: str, gen: int, nproc: int, manifest: Dict, *,
+                   timeout: float, poll: float = 0.05):
+    """Process 0: wait until every process's completion marker exists,
+    merge their checksums into the manifest.  A marker that never
+    appears means a peer died mid-save — fail with a clear error; the
+    previous committed generation is untouched."""
+    deadline = time.monotonic() + timeout
+    seen: set = set()
+    while True:
+        for pid in range(nproc):
+            if pid in seen:
+                continue
+            p = _marker_path(base, gen, pid)
+            if os.path.exists(p):
+                try:
+                    with open(p) as f:
+                        m = json.load(f)
+                except (json.JSONDecodeError, OSError):
+                    continue               # racing replace; retry
+                _apply_crcs(manifest, m.get("crc32", {}))
+                seen.add(pid)
+        if len(seen) >= nproc:
+            return
+        if time.monotonic() > deadline:
+            raise CheckpointTimeoutError(
+                f"timed out after {timeout:.0f}s waiting for save "
+                f"markers from processes "
+                f"{sorted(set(range(nproc)) - seen)} of generation "
+                f"{gen} — a peer likely died mid-save; the previous "
+                f"committed checkpoint is still restorable")
+        time.sleep(poll)
+
+
+def _await_commit(base: str, gen: int, timeout: float,
+                  poll: float = 0.05):
+    """Non-zero processes of an async save: wait for process 0's
+    manifest commit so the next save's generation arithmetic agrees
+    across processes."""
+    deadline = time.monotonic() + timeout
+    while _committed_generation(base) < gen:
+        if time.monotonic() > deadline:
+            raise CheckpointTimeoutError(
+                f"timed out after {timeout:.0f}s waiting for process 0 "
+                f"to commit generation {gen} — it likely died "
+                f"mid-save; the previous committed checkpoint is "
+                f"still restorable")
+        time.sleep(poll)
+
+
+def _prepare(base: str, *, collective: bool = True) -> Tuple[int, int]:
+    """Agree on the new generation and (process 0) clear leftovers of
+    interrupted saves + create the generation directory.  Collective
+    when ``collective`` (the multi-process path: barriers ensure no
+    peer is still reading the directory and that the directory exists
+    before anyone streams into it)."""
     committed = _committed_generation(base)
     gen = committed + 1
     arrays_root = os.path.join(base, "arrays")
@@ -239,60 +422,113 @@ def save(path: str, params, opt_state, step: int, tokens_seen: int,
     # it was still reading from this directory — e.g. a slower peer's
     # restore when resuming and re-saving to the same path) before
     # process 0 touches the directory
-    _barrier("ckpt-enter")
+    if collective:
+        _barrier("ckpt-enter")
     if jax.process_index() == 0:
-        os.makedirs(parent or ".", exist_ok=True)
+        os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
         if os.path.isdir(arrays_root):
             # clear leftovers of interrupted saves; the committed
             # generation stays restorable until the new one commits
             for entry in os.listdir(arrays_root):
                 if entry != str(committed):
                     shutil.rmtree(os.path.join(arrays_root, entry))
+        _clear_markers(base)
         os.makedirs(gen_dir, exist_ok=True)
-    _barrier("ckpt-prepare")
+    if collective:
+        _barrier("ckpt-prepare")
+    return committed, gen
 
+
+def _write_shards(base: str, mine, chunk_bytes: int) -> Dict[str, int]:
+    crcs: Dict[str, int] = {}
+    for ent, data in mine:
+        crcs[ent["file"]] = _stream_write(os.path.join(base, ent["file"]),
+                                          data, chunk_bytes)
+    return crcs
+
+
+def _commit(base: str, manifest: Dict, committed: int):
+    """Single-rename commit point; meta rides inside the manifest so
+    array index and step/tokens can never disagree.  The meta.json
+    sidecar is informational (humans, tooling).  Superseded state goes
+    only AFTER the commit: the previous generation — and, on the first
+    directory save over a legacy path, the old single-file .npz — must
+    stay restorable while this save can still fail."""
+    tmp = os.path.join(base, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(base, "manifest.json"))
+    with open(os.path.join(base, "meta.json"), "w") as f:
+        json.dump(manifest["meta"], f)
+    old_gen = os.path.join(base, "arrays", str(committed))
+    if committed >= 0 and os.path.isdir(old_gen):
+        shutil.rmtree(old_gen)
+    for stale in (base + ".npz", base + ".meta.json"):
+        if os.path.exists(stale):
+            os.remove(stale)
+    _clear_markers(base)
+
+
+# --------------------------------------------------------------------- #
+# save (synchronous, barrier-coordinated)
+# --------------------------------------------------------------------- #
+
+def save(path: str, params, opt_state, step: int, tokens_seen: int,
+         extra: Optional[Dict[str, Any]] = None, *,
+         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+         commit_timeout: float = DEFAULT_COMMIT_TIMEOUT):
+    """Write a sharded streaming checkpoint directory at ``path`` (any
+    trailing ``.npz`` is stripped — the name stays launcher-compatible).
+    Safe to call from every process of a multi-process run; collective
+    (all processes must call it); blocks until committed.
+
+    Crash-safe: shards stream into a fresh ``arrays/<generation>/``
+    while the previous generation and its manifest stay untouched, and
+    the new manifest lands in one ``os.replace`` — a save killed at
+    any point leaves the last committed checkpoint fully restorable
+    (uncommitted generations are garbage-collected by the next
+    save).  For saves that overlap training, use
+    :class:`CheckpointManager`."""
+    base = _base(path)
+    flat = _flat_state(params, opt_state)
+    committed, gen = _prepare(base)
     meta = {"step": int(step), "tokens_seen": tokens_seen,
             **(extra or {})}
-    manifest = {"format": FORMAT_VERSION, "generation": gen,
-                "meta": meta, "arrays": {}}
-    for li, (key, leaf) in enumerate(sorted(flat.items())):
-        shape, dtype, blocks = _global_blocks(leaf)
-        mine = _writer_blocks(leaf)
-        shards = []
-        for j, blk in enumerate(blocks):
-            fname = _shard_file(gen, li, j)
-            shards.append({"file": fname,
-                           "start": [a for a, _ in blk],
-                           "stop": [b for _, b in blk]})
-            if blk in mine:
-                _stream_write(os.path.join(base, fname), mine[blk],
-                              chunk_bytes)
-        manifest["arrays"][key] = {"shape": list(shape),
-                                   "dtype": dtype.name,
-                                   "shards": shards}
-    _barrier("ckpt-shards")
+    _run_save(base, flat, meta, committed, gen,
+              chunk_bytes=chunk_bytes, commit_timeout=commit_timeout,
+              barriers=True)
 
-    if jax.process_index() == 0:
-        # single-rename commit point; meta rides inside the manifest
-        # so array index and step/tokens can never disagree.  The
-        # meta.json sidecar is informational (humans, tooling).
-        tmp = os.path.join(base, "manifest.json.tmp")
-        with open(tmp, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, os.path.join(base, "manifest.json"))
-        with open(os.path.join(base, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        # superseded state goes only AFTER the commit: the previous
-        # generation — and, on the first directory save over a legacy
-        # path, the old single-file .npz — must stay restorable while
-        # this save can still fail
-        old_gen = os.path.join(arrays_root, str(committed))
-        if committed >= 0 and os.path.isdir(old_gen):
-            shutil.rmtree(old_gen)
-        for stale in (base + ".npz", base + ".meta.json"):
-            if os.path.exists(stale):
-                os.remove(stale)
-    _barrier("ckpt-commit")
+
+def _run_save(base: str, flat: Dict[str, Any], meta: Dict,
+              committed: int, gen: int, *, chunk_bytes: int,
+              commit_timeout: float, barriers: bool):
+    """Stream this process's blocks and run the commit protocol.
+    ``barriers=True`` is the synchronous path (cross-process barriers
+    around the commit); ``barriers=False`` is the async writer-thread
+    path, which must not issue jax collectives and coordinates through
+    the marker files alone."""
+    meta.setdefault("save_process_count", jax.process_count())
+    arrays, mine = _plan_writes(flat, gen)
+    manifest = {"format": FORMAT_VERSION, "generation": gen,
+                "meta": meta, "arrays": arrays}
+    crcs = _write_shards(base, mine, chunk_bytes)
+    nproc = jax.process_count()
+    me = jax.process_index()
+    if nproc > 1:
+        _write_marker(base, gen, me, crcs)
+        if barriers:
+            _barrier("ckpt-shards")
+        if me == 0:
+            _merge_markers(base, gen, nproc, manifest,
+                           timeout=commit_timeout)
+            _commit(base, manifest, committed)
+        elif not barriers:
+            _await_commit(base, gen, commit_timeout)
+        if barriers:
+            _barrier("ckpt-commit")
+    else:
+        _apply_crcs(manifest, crcs)
+        _commit(base, manifest, committed)
 
 
 def save_npz(path: str, params, opt_state, step: int, tokens_seen,
@@ -312,6 +548,209 @@ def save_npz(path: str, params, opt_state, step: int, tokens_seen,
     meta = {"step": step, "tokens_seen": tokens_seen, **(extra or {})}
     with open(base + ".meta.json", "w") as f:
         json.dump(meta, f)
+
+
+# --------------------------------------------------------------------- #
+# async manager
+# --------------------------------------------------------------------- #
+
+# Jitted so the copy cannot be elided: a bare identity hits jit's
+# passthrough-output fast path (the input array is forwarded, no new
+# buffers), while a traced jnp.copy compiles to a real copy whose
+# outputs are fresh XLA buffers with the inputs' shardings.
+_snapshot_jit = jax.jit(lambda t: jax.tree.map(jnp.copy, t))
+
+
+def snapshot_tree(tree):
+    """Donation-safe on-device copy of a state tree: fresh buffers
+    (same shardings) that the engine's donated next step cannot alias,
+    safe to stream from a background thread while training reuses the
+    originals."""
+    return _snapshot_jit(tree)
+
+
+@dataclass
+class _SaveJob:
+    base: str
+    params: Any
+    opt_state: Any
+    meta: Dict[str, Any]
+    chunk_bytes: int
+    # generation agreed collectively at request time (multi-process);
+    # None = derive at execution time (single-process worker)
+    committed: Optional[int] = None
+    gen: Optional[int] = None
+    requested_at: float = field(default_factory=time.monotonic)
+
+
+class CheckpointManager:
+    """Async, at-most-one-in-flight checkpoint writer.
+
+    ``request_save`` snapshots the state on device (a donation-safe
+    copy — the engine's next fused chunk donates the live buffers, the
+    copies are fresh) and returns; a background thread streams
+    device→host→disk and commits.  The step loop is blocked only for
+    the snapshot dispatch, not the write.
+
+    Multi-process coordination has two regimes:
+
+    - the *collective* part (entry barrier, generation agreement,
+      directory prep) runs on the CALLING thread — ``request_save``
+      must be invoked by every process at the same chunk boundary,
+      exactly like the sync :func:`save` — so the background threads
+      never issue jax collectives (a writer-thread collective could
+      interleave with training collectives and deadlock the mesh);
+    - the *commit* is coordinated through marker files alone: process 0
+      commits once every peer's marker is on disk, peers wait for the
+      committed generation to advance.  A dead peer surfaces as a
+      :class:`CheckpointTimeoutError` on the next ``check()`` /
+      ``request_save`` / ``finalize`` instead of hanging forever, and
+      the previous generation stays restorable.
+
+    In multi-process runs every request is honored in order (a new
+    request first joins the in-flight save, keeping all processes'
+    save sequences in lockstep); single-process requests **coalesce**:
+    while one save streams, only the newest pending request survives —
+    rapid-fire requests collapse to first + latest.
+
+    Writer-thread exceptions are captured and re-raised on the next
+    ``check()``/``request_save``/``finalize`` call, never silently
+    dropped; ``finalize`` joins cleanly at exit."""
+
+    def __init__(self, *, plan=None, seq_len: Optional[int] = None,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 commit_timeout: float = DEFAULT_COMMIT_TIMEOUT):
+        self.plan = plan
+        self.seq_len = seq_len
+        self.chunk_bytes = chunk_bytes
+        self.commit_timeout = commit_timeout
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._pending: Optional[_SaveJob] = None
+        self._error: Optional[BaseException] = None
+        self.saves_started = 0           # introspection (tests, bench)
+        self.saves_committed = 0
+        self.last_stall_s = 0.0          # time the caller was blocked
+
+    # -- error surfacing ------------------------------------------------ #
+    def check(self):
+        """Re-raise a background writer failure (once), e.g. at each
+        chunk boundary of the step loop."""
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
+
+    @property
+    def in_flight(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    # -- requests -------------------------------------------------------- #
+    def request_save(self, path: str, params, opt_state, step: int,
+                     tokens_seen: int,
+                     extra: Optional[Dict[str, Any]] = None, *,
+                     block: bool = False):
+        """Snapshot the state and schedule its save.  Collective in
+        multi-process runs (call at a chunk boundary on every
+        process).  ``block=True`` waits for the commit (sync
+        semantics through the async machinery)."""
+        t0 = time.monotonic()
+        self.check()
+        meta: Dict[str, Any] = {"step": int(step),
+                                "tokens_seen": tokens_seen}
+        if self.plan is not None:
+            ph = _plan_phase(self.plan, exact_tokens(tokens_seen),
+                             self.seq_len)
+            meta.update({"phase": ph.index,
+                         "batch_size": ph.batch_size,
+                         "schedule_kind": self.plan.kind,
+                         "total_tokens": self.plan.total_tokens})
+        meta.update(extra or {})
+        multiproc = jax.process_count() > 1
+        if multiproc:
+            # keep every process's save sequence identical regardless
+            # of relative writer speed: serialize requests
+            self.wait()
+            self.check()
+        job = _SaveJob(base=_base(path),
+                       params=snapshot_tree(params),
+                       opt_state=snapshot_tree(opt_state),
+                       meta=meta, chunk_bytes=self.chunk_bytes)
+        if multiproc:
+            job.committed, job.gen = _prepare(job.base)
+            with self._lock:
+                self._start_locked(job)
+        else:
+            with self._lock:
+                if self._thread is not None and self._thread.is_alive():
+                    self._pending = job      # coalesce: newest wins
+                else:
+                    self._start_locked(job)
+        self.last_stall_s = time.monotonic() - t0
+        if block:
+            self.wait()
+            self.check()
+
+    def _start_locked(self, job: _SaveJob):
+        self.saves_started += 1
+        self._thread = threading.Thread(
+            target=self._worker, args=(job,), daemon=True,
+            name="ckpt-writer")
+        self._thread.start()
+
+    # -- writer thread --------------------------------------------------- #
+    def _worker(self, job: _SaveJob):
+        while True:
+            try:
+                self._execute(job)
+                with self._lock:
+                    self.saves_committed += 1
+            except BaseException as e:       # surfaced via check()
+                with self._lock:
+                    self._error = e
+                    self._pending = None
+                    self._thread = None
+                return
+            with self._lock:
+                job, self._pending = self._pending, None
+                if job is None:
+                    self._thread = None
+                    return
+                self.saves_started += 1
+
+    def _execute(self, job: _SaveJob):
+        if job.gen is None:                  # single-process worker
+            committed, gen = _prepare(job.base, collective=False)
+        else:
+            committed, gen = job.committed, job.gen
+        flat = _flat_state(job.params, job.opt_state)
+        _run_save(job.base, flat, dict(job.meta), committed, gen,
+                  chunk_bytes=job.chunk_bytes,
+                  commit_timeout=self.commit_timeout, barriers=False)
+
+    # -- joining --------------------------------------------------------- #
+    def wait(self, timeout: Optional[float] = None):
+        """Join the in-flight save and any pending coalesced request
+        (the worker drains the pending slot before exiting)."""
+        deadline = None if timeout is None \
+            else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                t = self._thread
+            if t is None or not t.is_alive():
+                return
+            t.join(0.05 if deadline is None
+                   else max(min(deadline - time.monotonic(), 0.05), 0))
+            if deadline is not None and time.monotonic() > deadline:
+                raise CheckpointTimeoutError(
+                    f"async checkpoint writer did not finish within "
+                    f"{timeout:.0f}s")
+
+    def finalize(self):
+        """Join cleanly at exit and surface any writer error."""
+        self.wait()
+        self.check()
 
 
 # --------------------------------------------------------------------- #
@@ -370,6 +809,37 @@ def _entry_blocks(entry, base):
     return out
 
 
+def _verify_manifest(base: str, manifest: Dict):
+    """Check every block file against its manifest crc32.  Opt-in
+    (``restore(..., verify=True)``): it reads every byte of the
+    checkpoint, which the normal local-box restore avoids."""
+    unchecked = []
+    for key, entry in manifest["arrays"].items():
+        for sh in entry["shards"]:
+            fpath = os.path.join(base, sh["file"])
+            if "crc32" not in sh:
+                unchecked.append(sh["file"])
+                continue
+            try:
+                got = _crc_of_file(fpath)
+            except FileNotFoundError:
+                raise CheckpointCorruptionError(
+                    f"block {sh['file']} of {key!r} is named by the "
+                    f"manifest but missing on disk") from None
+            if got != sh["crc32"]:
+                raise CheckpointCorruptionError(
+                    f"checksum mismatch in block {sh['file']} of "
+                    f"{key!r}: manifest crc32={sh['crc32']}, file "
+                    f"crc32={got} — the checkpoint is corrupt; "
+                    f"restore an older copy or retrain from the "
+                    f"previous checkpoint")
+    if unchecked:
+        warnings.warn(
+            f"{len(unchecked)} block(s) carry no checksum "
+            f"(pre-checksum manifest); skipped verification for them",
+            stacklevel=3)
+
+
 def _assemble(gshape, template, sharding, saved_blocks):
     """One leaf: read this process's block and build the output array.
     Without a target sharding the full array is read onto the single
@@ -399,10 +869,13 @@ def _tree_shardings(shardings, template):
 
 
 def _restore_manifest(base: str, params_template, opt_template,
-                      shardings) -> Tuple[Any, Any, Dict[str, Any]]:
+                      shardings, verify: bool
+                      ) -> Tuple[Any, Any, Dict[str, Any]]:
     with open(os.path.join(base, "manifest.json")) as f:
         manifest = json.load(f)
     meta = manifest["meta"]       # committed atomically with the index
+    if verify:
+        _verify_manifest(base, manifest)
     psh, osh = shardings if shardings is not None else (None, None)
     out = []
     for prefix, template, sh in (("p:", params_template, psh),
@@ -443,7 +916,8 @@ def _restore_legacy_npz(base: str, params_template, opt_template,
 
 
 def restore(path: str, params_template, opt_template, *,
-            shardings: Optional[Tuple[Any, Any]] = None
+            shardings: Optional[Tuple[Any, Any]] = None,
+            verify: bool = False
             ) -> Tuple[Any, Any, Dict[str, Any]]:
     """Restore ``(params, opt_state, meta)`` from a checkpoint at
     ``path`` — a sharded directory (preferred) or a legacy single-file
@@ -452,12 +926,20 @@ def restore(path: str, params_template, opt_template, *,
     ``PhaseEngine.state_shardings``): with it, every process reads and
     device-puts only its addressable block and the global arrays are
     reassembled across processes; without it, arrays land replicated on
-    the local default device (single-process behaviour)."""
+    the local default device (single-process behaviour).  The target
+    topology need not match the saving one — the format is elastic.
+    ``verify=True`` checks every block against its manifest crc32
+    first and raises :class:`CheckpointCorruptionError` naming the bad
+    block."""
     base = _base(path)
     if os.path.exists(os.path.join(base, "manifest.json")):
         return _restore_manifest(base, params_template, opt_template,
-                                 shardings)
+                                 shardings, verify)
     if os.path.exists(base + ".npz"):
+        if verify:
+            warnings.warn("legacy .npz checkpoints carry no "
+                          "checksums; --verify-restore skipped",
+                          stacklevel=2)
         return _restore_legacy_npz(base, params_template, opt_template,
                                    shardings)
     raise FileNotFoundError(
@@ -469,10 +951,25 @@ def exact_tokens(tokens_seen) -> int:
     """A checkpoint's ``tokens_seen`` as an exact int.  Post-PR-4
     metadata is already an arbitrary-precision JSON int and must NOT
     round-trip through float64 (exact only to 2^53); legacy float
-    values are rounded (their step boundaries are integral)."""
+    values whose integer value is unambiguous are converted silently
+    (their step boundaries are integral), while a float that is NOT
+    exactly an integer — a corrupted or hand-edited hint — is rejected
+    with a warning (and rounded) instead of silently rounding."""
     if isinstance(tokens_seen, int):
         return tokens_seen
-    return int(round(float(tokens_seen)))
+    f = float(tokens_seen)
+    if not f.is_integer():
+        warnings.warn(
+            f"legacy checkpoint tokens_seen={f!r} is not exactly "
+            f"representable as an int; rounding to {int(round(f))} — "
+            f"the resumed data position may be off by up to one step",
+            stacklevel=2)
+    elif abs(f) >= 2.0 ** 53:
+        warnings.warn(
+            f"legacy float tokens_seen={f!r} exceeds 2^53: the true "
+            f"token count may have been rounded at save time",
+            stacklevel=2)
+    return int(round(f))
 
 
 # --------------------------------------------------------------------- #
@@ -506,7 +1003,8 @@ def save_phase_checkpoint(path: str, params, opt_state, step: int,
 
 def restore_phase_checkpoint(path: str, params_template, opt_template,
                              *, plan, seq_len: Optional[int] = None,
-                             shardings: Optional[Tuple[Any, Any]] = None
+                             shardings: Optional[Tuple[Any, Any]] = None,
+                             verify: bool = False
                              ) -> Tuple[Any, Any, Dict[str, Any]]:
     """Restore and verify the plan agrees with the checkpoint: the
     restored ``tokens_seen`` must land in the recorded phase with the
@@ -515,7 +1013,7 @@ def restore_phase_checkpoint(path: str, params_template, opt_template,
     returned meta is an exact int for post-PR-4 checkpoints and a float
     for legacy ones (callers round — boundaries are integral)."""
     params, opt, meta = restore(path, params_template, opt_template,
-                                shardings=shardings)
+                                shardings=shardings, verify=verify)
     if "phase" in meta:
         tok = exact_tokens(meta["tokens_seen"])
         ph = _plan_phase(plan, tok, seq_len)

@@ -378,6 +378,16 @@ class PhaseEngine:
                                        **kw)
         return self._cache[key]
 
+    # -- checkpointing -------------------------------------------------- #
+    def make_checkpoint_manager(self, **kw):
+        """An async :class:`repro.train.checkpoint.CheckpointManager`
+        bound to this engine's plan and seq_len, so its saves carry the
+        same phase metadata as the trainer's sync path.  ``kw`` passes
+        through (``chunk_bytes``, ``commit_timeout``)."""
+        from repro.train.checkpoint import CheckpointManager
+        return CheckpointManager(plan=self.plan,
+                                 seq_len=self.cfg.seq_len, **kw)
+
     # -- dispatch ------------------------------------------------------- #
     def run_chunk(self, params, opt_state, tokens_seen,
                   stacked_batch, n_valid: Optional[int] = None,

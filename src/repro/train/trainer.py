@@ -108,6 +108,7 @@ class Trainer:
                 opt_state = _place_like(opt_state, sh[1])
         self.state = TrainState(params, opt_state)
         self.history: List[Dict[str, float]] = []
+        self._ckpt_manager: Optional[CKPT.CheckpointManager] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -125,31 +126,62 @@ class Trainer:
         return self.engine.micro_batches(batch_size)
 
     # -- checkpointing -------------------------------------------------- #
+    @property
+    def checkpoint_manager(self) -> "CKPT.CheckpointManager":
+        """The trainer's async checkpoint writer, built lazily from the
+        engine (so runs that never save pay nothing)."""
+        if self._ckpt_manager is None:
+            self._ckpt_manager = self.engine.make_checkpoint_manager()
+        return self._ckpt_manager
+
     def save_checkpoint(self, path: str,
-                        chunk_bytes: int = CKPT.DEFAULT_CHUNK_BYTES):
+                        chunk_bytes: int = CKPT.DEFAULT_CHUNK_BYTES,
+                        block: bool = True):
         """Write a sharded streaming checkpoint directory (collective
         in a multi-process run: every process writes only the shards it
-        owns, in ``chunk_bytes``-bounded device→host slices)."""
+        owns, in ``chunk_bytes``-bounded device→host slices).
+        ``block=False`` snapshots the state on device and returns
+        immediately while the :attr:`checkpoint_manager`'s writer
+        thread streams it to disk."""
+        if not block:
+            self.checkpoint_manager.request_save(
+                path, self.state.params, self.state.opt_state,
+                self.state.step, self.state.tokens_seen)
+            return
+        if self._ckpt_manager is not None:
+            # an in-flight async save of an older snapshot must land
+            # first: generations are sequential per directory
+            self._ckpt_manager.finalize()
         CKPT.save_phase_checkpoint(path, self.state.params,
                                    self.state.opt_state, self.state.step,
                                    self.state.tokens_seen, plan=self.plan,
                                    seq_len=self.cfg.seq_len,
                                    chunk_bytes=chunk_bytes)
 
-    def restore_checkpoint(self, path: str) -> Dict[str, Any]:
+    def restore_checkpoint(self, path: str,
+                           verify: bool = False) -> Dict[str, Any]:
         """Restore sharded-directory or legacy ``.npz`` checkpoints.
         With a mesh, each process reads only its addressable block of
         every array and the global state is reassembled across
         processes — no host ever holds a full replica of a sharded
-        leaf."""
+        leaf.  The save-time topology need not match this run's
+        (elastic resume).  ``verify=True`` checks every block's crc32
+        first."""
         p, s, meta = CKPT.restore_phase_checkpoint(
             path, self.state.params, self.state.opt_state, plan=self.plan,
             seq_len=self.cfg.seq_len,
-            shardings=self.engine.state_shardings())
+            shardings=self.engine.state_shardings(), verify=verify)
         self.state.params, self.state.opt_state = p, s
         self.state.step = int(meta["step"])
         self.state.tokens_seen = CKPT.exact_tokens(meta["tokens_seen"])
         return meta
+
+    def close(self):
+        """Join the async checkpoint writer (if any) and surface any
+        writer-thread error.  Call at the end of a run that used async
+        saves; idempotent."""
+        if self._ckpt_manager is not None:
+            self._ckpt_manager.finalize()
 
     # -- fused run loop ------------------------------------------------- #
     def _chunks(self, loader, max_steps):
@@ -230,12 +262,32 @@ class Trainer:
         pending.clear()
 
     def run(self, loader, max_steps: Optional[int] = None,
-            log_cb: Optional[Callable] = None) -> List[Dict[str, float]]:
+            log_cb: Optional[Callable] = None, *,
+            checkpoint_path: Optional[str] = None,
+            save_every: Optional[int] = None,
+            async_save: bool = True,
+            stop_fn: Optional[Callable[[], bool]] = None
+            ) -> List[Dict[str, float]]:
+        """Run the fused chunk loop.  ``checkpoint_path`` +
+        ``save_every`` turn on periodic saves at chunk boundaries
+        (every chunk crossing a ``save_every``-step boundary) — async
+        by default: the state is snapshotted on device and the writer
+        thread streams it while the next chunks train; writer errors
+        surface at the next chunk boundary.  ``stop_fn`` is polled at
+        each chunk boundary (the preemption hook): returning True ends
+        the loop cleanly with the state on an exact chunk boundary, so
+        a final save/resume is bitwise-consistent.  In multi-process
+        runs all of these fire at the same boundary on every process
+        (the chunk stream is deterministic and save/stop decisions are
+        functions of the shared step count)."""
         st = self.state
         t0 = time.time()
         le = max(self.cfg.log_every, 1)
+        se = max(save_every, 1) if save_every else None
         pending: List[Tuple] = []
         for phase, stacked, n in self._chunks(loader, max_steps):
+            if self._ckpt_manager is not None:
+                self._ckpt_manager.check()
             params, opt_state, metrics = self.engine.run_chunk(
                 st.params, st.opt_state, st.tokens_seen, stacked,
                 n_valid=n, step=st.step)
@@ -247,5 +299,11 @@ class Trainer:
                             time.time() - t0, metrics, n))
             if st.step // le > base_step // le:
                 self._flush(pending, log_cb)
+            if (se and checkpoint_path
+                    and st.step // se > base_step // se):
+                self.save_checkpoint(checkpoint_path,
+                                     block=not async_save)
+            if stop_fn is not None and stop_fn():
+                break
         self._flush(pending, log_cb)
         return self.history

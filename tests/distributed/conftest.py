@@ -10,9 +10,16 @@ forces an N-device host platform via
 environment *before* the subprocess imports jax, so test scripts need
 no device boilerplate.  Scripts report by printing one JSON object as
 their last stdout line.
+
+Every child is launched in its OWN process group
+(``start_new_session=True``) and a test that blows its deadline kills
+the whole group with SIGKILL — a hung gloo coordinator (or anything it
+forked) fails the suite in minutes instead of wedging the CI job until
+the runner-level timeout.
 """
 import json
 import os
+import signal
 import socket
 import subprocess
 import sys
@@ -35,15 +42,40 @@ def _env(devices: int):
     return env
 
 
+def _kill_group(p: subprocess.Popen):
+    """SIGKILL a child's whole process group (it was started with
+    ``start_new_session=True``, so the group is ours to kill); fall
+    back to killing just the child if the group is already gone."""
+    try:
+        os.killpg(os.getpgid(p.pid), signal.SIGKILL)
+    except (ProcessLookupError, PermissionError, OSError):
+        try:
+            p.kill()
+        except OSError:
+            pass
+
+
+def _popen(script: str, argv, devices: int) -> subprocess.Popen:
+    return subprocess.Popen(
+        [sys.executable, "-c", script, *map(str, argv)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        text=True, env=_env(devices), start_new_session=True)
+
+
 @pytest.fixture
 def run_subprocess():
     def run(script: str, *argv, devices: int = 8, timeout: int = 420):
-        out = subprocess.run(
-            [sys.executable, "-c", script, *map(str, argv)],
-            capture_output=True, text=True, env=_env(devices),
-            timeout=timeout)
-        assert out.returncode == 0, out.stderr[-3000:]
-        return json.loads(out.stdout.strip().splitlines()[-1])
+        p = _popen(script, argv, devices)
+        try:
+            out, err = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            _kill_group(p)
+            out, err = p.communicate()
+            raise subprocess.TimeoutExpired(
+                cmd="run_subprocess", timeout=timeout,
+                stderr=(err or "")[-2000:])
+        assert p.returncode == 0, err[-3000:]
+        return json.loads(out.strip().splitlines()[-1])
 
     return run
 
@@ -54,50 +86,75 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
+def _run_group(script: str, argv, *, nprocs: int, devices: int,
+               timeout: int):
+    """Launch ``nprocs`` copies of ``script`` as one
+    ``jax.distributed`` process group over a local TCP coordinator
+    and return ``[(returncode, stdout, stderr)]`` in pid order.  No
+    exit-code policy — callers decide (fault-injection tests expect a
+    child to die).  On deadline every child's process GROUP is
+    SIGKILLed."""
+    port = _free_port()
+    procs = [_popen(script, (pid, nprocs, port, *argv), devices)
+             for pid in range(nprocs)]
+    # drain every process's pipes CONCURRENTLY: a child that fills
+    # its 64 KiB pipe while a sibling is being communicate()d would
+    # block mid-write, drop out of the collectives, and turn its
+    # real traceback into an opaque group-wide timeout
+    outs = [None] * nprocs
+    threads = [
+        threading.Thread(target=lambda i=i, p=p: outs.__setitem__(
+            i, p.communicate()), daemon=True)
+        for i, p in enumerate(procs)]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(max(deadline - time.monotonic(), 1))
+    if any(t.is_alive() for t in threads):
+        for p in procs:
+            _kill_group(p)
+        for t in threads:
+            t.join(10)
+        raise subprocess.TimeoutExpired(
+            cmd="run_group", timeout=timeout,
+            stderr="; ".join(
+                (o[1] or "")[-500:] for o in outs if o))
+    return [(p.returncode, o[0] or "", o[1] or "")
+            for p, o in zip(procs, outs)]
+
+
 @pytest.fixture
 def run_multiprocess():
     """Launch ``nprocs`` copies of ``script`` as a true ``jax.distributed``
     process group over a local TCP coordinator.  Each copy receives
     ``(process_id, nprocs, port, *argv)`` as argv and the same pinned
     CPU environment as ``run_subprocess`` (``devices`` forced host
-    devices *per process*).  Returns the JSON object printed as the
-    last stdout line of process 0."""
+    devices *per process*).  Asserts every process exited 0 and
+    returns the JSON object printed as the last stdout line of
+    process 0."""
 
     def run(script: str, *argv, nprocs: int = 2, devices: int = 1,
             timeout: int = 540):
-        port = _free_port()
-        procs = [
-            subprocess.Popen(
-                [sys.executable, "-c", script, str(pid), str(nprocs),
-                 str(port), *map(str, argv)],
-                stdout=subprocess.PIPE, stderr=subprocess.PIPE,
-                text=True, env=_env(devices))
-            for pid in range(nprocs)]
-        # drain every process's pipes CONCURRENTLY: a child that fills
-        # its 64 KiB pipe while a sibling is being communicate()d would
-        # block mid-write, drop out of the collectives, and turn its
-        # real traceback into an opaque group-wide timeout
-        outs = [None] * nprocs
-        threads = [
-            threading.Thread(target=lambda i=i, p=p: outs.__setitem__(
-                i, p.communicate()), daemon=True)
-            for i, p in enumerate(procs)]
-        for t in threads:
-            t.start()
-        deadline = time.monotonic() + timeout
-        for t in threads:
-            t.join(max(deadline - time.monotonic(), 1))
-        if any(t.is_alive() for t in threads):
-            for p in procs:
-                p.kill()
-            for t in threads:
-                t.join(10)
-            raise subprocess.TimeoutExpired(
-                cmd="run_multiprocess", timeout=timeout,
-                stderr="; ".join(
-                    (o[1] or "")[-500:] for o in outs if o))
-        for p, (_, err) in zip(procs, outs):
-            assert p.returncode == 0, err[-3000:]
-        return json.loads(outs[0][0].strip().splitlines()[-1])
+        res = _run_group(script, argv, nprocs=nprocs, devices=devices,
+                         timeout=timeout)
+        for rc, _, err in res:
+            assert rc == 0, err[-3000:]
+        return json.loads(res[0][1].strip().splitlines()[-1])
+
+    return run
+
+
+@pytest.fixture
+def run_multiprocess_raw():
+    """Like ``run_multiprocess`` but with no exit-code policy: returns
+    the raw ``[(returncode, stdout, stderr)]`` in pid order — the
+    fault-injection tests kill one child on purpose and inspect the
+    survivors."""
+
+    def run(script: str, *argv, nprocs: int = 2, devices: int = 1,
+            timeout: int = 540):
+        return _run_group(script, argv, nprocs=nprocs, devices=devices,
+                          timeout=timeout)
 
     return run

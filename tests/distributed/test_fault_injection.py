@@ -1,0 +1,183 @@
+"""Kill one process at a randomized point DURING an async save; the
+previously committed generation must always restore.
+
+Two real ``jax.distributed`` processes train briefly on the fixed
+``(2, 1)`` mesh and commit generation 0 synchronously (process 0 also
+writes a host-side reference copy of the params).  Then both request
+an ASYNC save of the same state under a different step tag — and the
+victim process (chosen by the iteration's seed) SIGKILLs itself after
+a seed-chosen number of block writes, mid-stream in its writer
+thread.  The survivor must NOT hang: when the victim is a
+non-coordinator process, the marker/commit waits are bounded by the
+manager's ``commit_timeout`` and surface a ``CheckpointTimeoutError``
+at ``finalize()``, with the committed manifest still at generation 0.
+When the victim IS process 0, jax's coordination service tears the
+survivor down itself (its gRPC stream to the dead coordinator errors
+and the runtime aborts) — still bounded, still no commit; the
+durability claim is then carried entirely by the independent
+verifier.  An independent single-process run
+then restores the directory (crc-verified, elastic 2→1) and must get
+generation 0's params bitwise and its step tag — proving the murdered
+generation-1 save left no trace in what restore sees.
+
+The victim self-kills with SIGKILL — no cleanup, no exit handlers —
+which is exactly what a preempted pod looks like to the survivors.
+"""
+import json
+import random
+
+import pytest
+
+SCRIPT = r"""
+import json, os, random, signal, sys
+pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+ckdir, refpath, seed = sys.argv[4], sys.argv[5], int(sys.argv[6])
+
+from repro.launch.train import maybe_init_distributed
+assert maybe_init_distributed(f"127.0.0.1:{port}", nproc, pid)
+
+import jax
+import numpy as np
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.train import checkpoint as CKPT
+from repro.train.trainer import Trainer
+
+SEQ = 32
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                   d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                   d_ff=128, vocab_size=128, max_seq_len=64,
+                   rope_theta=1e4)
+cfg = RunConfig(
+    model=TINY,
+    schedule=ScheduleConfig(kind="seesaw", base_lr=1e-3, alpha=2.0,
+                            n_cuts=2),
+    optimizer=OptimizerConfig(kind="adamw"),
+    seq_len=SEQ, global_batch_size=8, total_tokens=SEQ * 8 * 24,
+    remat=False, dtype="float32")
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+tr = Trainer(cfg, mesh=mesh, fuse_steps=4)
+loader = PhaseDataLoader(MarkovLM(128, seed=0), tr.plan, SEQ,
+                         mesh=mesh, per_host=True)
+tr.run(loader, max_steps=4)
+
+# generation 0: committed synchronously, this is the state that must
+# survive; pid 0 also keeps a host copy as the bitwise reference
+tr.save_checkpoint(ckdir)
+if pid == 0:
+    np.savez(refpath, *[np.asarray(x.addressable_shards[0].data)
+                        for x in jax.tree.leaves(tr.state.params)])
+gen0 = CKPT._committed_generation(ckdir)
+
+# the murder weapon: after `kill_after` block writes, the victim's
+# writer thread SIGKILLs the whole process mid-save — both processes
+# derive the same (victim, kill_after) from the shared seed
+rng = random.Random(seed)
+victim = rng.randrange(nproc)
+kill_after = 1 + rng.randrange(8)
+writes = {"n": 0}
+orig = CKPT._stream_write
+
+def lethal(path, data, chunk_bytes):
+    writes["n"] += 1
+    if pid == victim and writes["n"] >= kill_after:
+        os.kill(os.getpid(), signal.SIGKILL)
+    return orig(path, data, chunk_bytes)
+
+CKPT._stream_write = lethal
+
+# generation 1 attempt: same arrays, distinct step tag — if it ever
+# committed, the verifier below would see step=999 and fail
+mgr = tr.engine.make_checkpoint_manager(commit_timeout=8.0)
+mgr.request_save(ckdir, tr.state.params, tr.state.opt_state,
+                 step=999, tokens_seen=tr.state.tokens_seen)
+timeout_error = False
+try:
+    mgr.finalize()
+except CKPT.CheckpointTimeoutError:
+    timeout_error = True
+
+rec = {"pid": pid, "victim": victim, "kill_after": kill_after,
+       "timeout_error": timeout_error,
+       "committed_gen": CKPT._committed_generation(ckdir),
+       "gen0": gen0, "my_writes": writes["n"]}
+print(json.dumps(rec))
+sys.stdout.flush()
+# the peer is dead: skip jax.distributed shutdown (it would block on
+# the missing process) — this survivor's job is done
+os._exit(0)
+"""
+
+VERIFY = r"""
+import json, os, sys
+ckdir, refpath = sys.argv[1], sys.argv[2]
+import jax
+import numpy as np
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.train.trainer import Trainer
+
+SEQ = 32
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                   d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                   d_ff=128, vocab_size=128, max_seq_len=64,
+                   rope_theta=1e4)
+cfg = RunConfig(
+    model=TINY,
+    schedule=ScheduleConfig(kind="seesaw", base_lr=1e-3, alpha=2.0,
+                            n_cuts=2),
+    optimizer=OptimizerConfig(kind="adamw"),
+    seq_len=SEQ, global_batch_size=8, total_tokens=SEQ * 8 * 24,
+    remat=False, dtype="float32")
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+tr = Trainer(cfg, mesh=mesh, fuse_steps=4)
+meta = tr.restore_checkpoint(ckdir, verify=True)
+ref = np.load(refpath)
+mine = [np.asarray(x.addressable_shards[0].data)
+        for x in jax.tree.leaves(tr.state.params)]
+print(json.dumps({
+    "step": int(meta["step"]),
+    "bitwise": bool(all(np.array_equal(ref[k], v)
+                        for k, v in zip(ref.files, mine)))}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kill_during_save_keeps_previous_generation(
+        run_multiprocess_raw, run_subprocess, tmp_path, seed):
+    ck = str(tmp_path / "ck")
+    ref = str(tmp_path / "ref.npz")
+    res = run_multiprocess_raw(SCRIPT, ck, ref, seed, nprocs=2,
+                               devices=1, timeout=540)
+    # the same (victim, kill_after) derivation the script performs
+    victim = random.Random(seed).randrange(2)
+    # the victim was murdered (SIGKILL -> rc -9) and nobody hung (the
+    # harness's deadline would have tripped)
+    assert res[victim][0] == -9, res[victim][2][-400:]
+    surv_rc, surv_out, surv_err = res[1 - victim]
+    if victim == 0:
+        # the coordinator died: jax's coordination service tears the
+        # survivor down (gRPC stream error -> runtime abort) unless it
+        # reached its own bounded timeout first — either way, bounded
+        assert surv_rc != -9, surv_err[-400:]
+    else:
+        # non-coordinator victim: process 0 survives, times out
+        # waiting for the dead peer's marker, and reports cleanly
+        assert surv_rc == 0, surv_err[-400:]
+    if surv_rc == 0:
+        rec = json.loads(surv_out.strip().splitlines()[-1])
+        assert rec["pid"] != rec["victim"]
+        # bounded failure, not a hang: the survivor saw the timeout
+        assert rec["timeout_error"], rec
+        # and the committed manifest never moved past generation 0
+        assert rec["committed_gen"] == rec["gen0"], rec
+
+    # independent restore (fresh single process, elastic 2->1, crc
+    # verified): generation 0's params bitwise, generation 1's step
+    # tag (999) nowhere to be seen
+    rec = run_subprocess(VERIFY, ck, ref, devices=2, timeout=420)
+    assert rec["step"] != 999
+    assert rec["bitwise"], rec

@@ -7,8 +7,13 @@ Seesaw batch ramp with per-host data feeding on a global ``(2, 1)``
 data x model mesh.  The run is checkpointed mid-ramp exactly on the
 first merged-segment (batch-size) boundary into the sharded streaming
 directory format, resumed in a fresh trainer, and the final params
-must match the single-process run on the identical mesh **bitwise**
-(float32 per the bf16-drift note).  Along the way the script proves
+must match the UNINTERRUPTED two-process run **bitwise** (float32 per
+the bf16-drift note).  The single-process run of the same workload on
+the same mesh is compared within collective-rounding distance instead:
+XLA's in-process all-reduce and gloo's cross-process all-reduce round
+the last ulp differently (~1e-6 relative over this run, with per-step
+loss histories still identical), so cross-topology bitwise equality
+is not physical.  Along the way the script proves
 no process ever materializes a full replica during save: every
 device→host transfer goes through ``checkpoint._to_host`` and is
 bounded by the chunk size.
@@ -84,6 +89,12 @@ if mode == "ref":
 
 assert jax.process_count() == 2 and jax.device_count() == 2
 
+# -- uninterrupted 2-process baseline: the bitwise reference for the
+# interrupted+resumed run (same topology, same collectives) ----------- #
+tr_full, loader_full = make()
+tr_full.run(loader_full)
+full_params = host_params(tr_full)
+
 # -- interrupted leg: train to the first batch-size boundary ---------- #
 tr, loader = make()
 steps0 = tr.plan.steps_per_phase(SEQ)[0]
@@ -150,11 +161,17 @@ rec = {"pid": pid, "nproc": jax.process_count(),
        "tokens_meta_int": isinstance(meta["tokens_seen"], int)}
 
 if pid == 0:
-    ref = np.load(refpath)
     mine = host_params(tr2)
     rec["n_leaves"] = len(mine)
+    # resume equivalence, bitwise, against the same-topology baseline
     rec["bitwise"] = all(
-        np.array_equal(ref[k], v) for k, v in zip(ref.files, mine))
+        np.array_equal(a, b) for a, b in zip(full_params, mine))
+    # cross-topology: within collective-rounding distance of the
+    # single-process run
+    ref = np.load(refpath)
+    rec["ref_max_rel"] = max(
+        float((np.abs(ref[k] - v) / (np.abs(ref[k]) + 1e-12)).max())
+        for k, v in zip(ref.files, mine))
     man = json.load(open(os.path.join(ckdir, "manifest.json")))
     rec["manifest_leaves"] = len(man["arrays"])
     rec["files_exist"] = all(
@@ -187,6 +204,7 @@ def test_two_process_ramp_checkpoint_resume_bitwise(run_multiprocess,
                            devices=1, timeout=540)
     assert rec["nproc"] == 2
     assert rec["bitwise"], rec
+    assert rec["ref_max_rel"] <= 1e-4, rec
     assert rec["tokens_meta_int"]
     assert rec["resave_ok"]
     # bounded streaming: no single device→host transfer above the

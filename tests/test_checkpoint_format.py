@@ -264,3 +264,86 @@ class TestLegacyMigration:
         os.remove(os.path.join(base, "manifest.json"))
         with pytest.raises(FileNotFoundError):
             CKPT.restore(base, params, st)
+
+
+class TestChecksums:
+    def test_manifest_carries_crc32_and_writer(self, tmp_path):
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=1, tokens_seen=32)
+        man = json.load(open(os.path.join(base, "manifest.json")))
+        assert man["format"] == CKPT.FORMAT_VERSION
+        for entry in man["arrays"].values():
+            for sh in entry["shards"]:
+                assert isinstance(sh["crc32"], int)
+                assert sh["writer"] == 0        # single process
+                # and the recorded crc really is the file's content crc
+                assert CKPT._crc_of_file(
+                    os.path.join(base, sh["file"])) == sh["crc32"]
+
+    def test_corrupt_block_raises_naming_it(self, tmp_path):
+        """Flipping bytes of ONE block file must fail verification with
+        an error that names that block — and restore without
+        ``verify`` must stay permissive (the fast path reads only what
+        it needs and trusts the disk)."""
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=1, tokens_seen=32)
+        man = json.load(open(os.path.join(base, "manifest.json")))
+        # pick a matrix leaf deterministically (largest block file)
+        victim = max(
+            (sh for e in man["arrays"].values() for sh in e["shards"]),
+            key=lambda sh: os.path.getsize(
+                os.path.join(base, sh["file"])))["file"]
+        fpath = os.path.join(base, victim)
+        arr = np.load(fpath)
+        arr.reshape(-1)[:4] += 1.0
+        np.save(fpath, arr)                # same shape/dtype, new bytes
+        with pytest.raises(CKPT.CheckpointCorruptionError) as ei:
+            CKPT.restore(base, params, st, verify=True)
+        assert victim in str(ei.value)
+        # unverified restore still works (returns the corrupt bytes)
+        p_r, _, _ = CKPT.restore(base, params, st)
+        assert p_r is not None
+
+    def test_missing_block_raises_corruption_error(self, tmp_path):
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save(base, params, st, step=1, tokens_seen=32)
+        man = json.load(open(os.path.join(base, "manifest.json")))
+        victim = next(iter(man["arrays"].values()))["shards"][0]["file"]
+        os.remove(os.path.join(base, victim))
+        with pytest.raises(CKPT.CheckpointCorruptionError,
+                           match="missing on disk"):
+            CKPT.restore(base, params, st, verify=True)
+
+    def test_legacy_npz_verify_warns_not_crashes(self, tmp_path):
+        params, st = _state()
+        base = str(tmp_path / "ck")
+        CKPT.save_npz(base, params, st, step=1, tokens_seen=32.0)
+        with pytest.warns(UserWarning, match="no.*checksums"):
+            CKPT.restore(base, params, st, verify=True)
+
+
+class TestExactTokens:
+    def test_int_passthrough_silent(self):
+        import warnings as W
+        with W.catch_warnings():
+            W.simplefilter("error")
+            assert CKPT.exact_tokens(2816) == 2816
+            assert CKPT.exact_tokens(2 ** 60 + 1) == 2 ** 60 + 1
+
+    def test_integral_float_silent(self):
+        import warnings as W
+        with W.catch_warnings():
+            W.simplefilter("error")
+            assert CKPT.exact_tokens(2816.0) == 2816
+
+    def test_non_integral_float_warns_and_rounds(self):
+        with pytest.warns(UserWarning,
+                          match="not exactly representable"):
+            assert CKPT.exact_tokens(2816.3) == 2816
+
+    def test_float_past_2_53_warns(self):
+        with pytest.warns(UserWarning, match="2\\^53"):
+            CKPT.exact_tokens(float(2 ** 54))

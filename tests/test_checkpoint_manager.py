@@ -1,0 +1,204 @@
+"""CheckpointManager edge cases on a single process.
+
+The async writer must behave like the sync save observably: same
+on-disk format (manifest with crc32 + writer fields), same restore.
+The edge cases that make it safe in a real step loop: rapid-fire
+requests coalesce to first + newest, a writer-thread exception is
+re-raised at the next interaction instead of vanishing, GC never
+deletes the only committed generation, and the snapshot is isolated
+from donation (deleting the live buffers after ``request_save`` must
+not corrupt the save).
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as CKPT
+
+
+def _state(seed=0, n=6):
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+    params = {"w": jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    opt = {"mu": {"w": jnp.zeros((n, 4), np.float32),
+                  "b": jnp.ones((4,), np.float32)},
+           "count": jnp.int32(3)}
+    return params, opt
+
+
+def _manifest(base):
+    with open(os.path.join(base, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_async_save_commits_and_matches_sync(tmp_path):
+    params, opt = _state()
+    mgr = CKPT.CheckpointManager()
+    a = str(tmp_path / "async")
+    mgr.request_save(a, params, opt, step=7, tokens_seen=123, block=True)
+    mgr.finalize()
+
+    s = str(tmp_path / "sync")
+    CKPT.save(s, params, opt, step=7, tokens_seen=123)
+
+    ma, ms = _manifest(a), _manifest(s)
+    assert ma["meta"]["step"] == ms["meta"]["step"] == 7
+    assert ma["meta"]["tokens_seen"] == 123
+    assert ma["arrays"].keys() == ms["arrays"].keys()
+    for key, ea in ma["arrays"].items():
+        for sh_a, sh_s in zip(ea["shards"], ms["arrays"][key]["shards"]):
+            # identical content => identical checksums; single process
+            # => every writer is 0, recorded in both manifests
+            assert sh_a["crc32"] == sh_s["crc32"]
+            assert sh_a["writer"] == sh_s["writer"] == 0
+
+    pa, oa, meta = CKPT.restore(a, params, opt, verify=True)
+    for k in params:
+        assert np.array_equal(np.asarray(pa[k]), np.asarray(params[k]))
+    assert np.array_equal(np.asarray(oa["mu"]["b"]),
+                          np.asarray(opt["mu"]["b"]))
+    assert meta["step"] == 7
+
+
+def test_overlapping_requests_coalesce_to_newest(tmp_path, monkeypatch):
+    """Three rapid requests while the writer is gated: the first starts
+    immediately, the middle one is superseded, and after release the
+    committed checkpoint is the NEWEST request — exactly 2 saves ran."""
+    params, opt = _state()
+    path = str(tmp_path / "ck")
+    gate = threading.Event()
+    orig = CKPT._stream_write
+
+    def gated(p, data, chunk_bytes):
+        gate.wait(timeout=30)
+        return orig(p, data, chunk_bytes)
+
+    monkeypatch.setattr(CKPT, "_stream_write", gated)
+    mgr = CKPT.CheckpointManager()
+    mgr.request_save(path, params, opt, step=1, tokens_seen=10)
+    mgr.request_save(path, params, opt, step=2, tokens_seen=20)
+    mgr.request_save(path, params, opt, step=3, tokens_seen=30)
+    gate.set()
+    mgr.finalize()
+    assert mgr.saves_started == 2          # first + coalesced newest
+    assert mgr.saves_committed == 2
+    man = _manifest(path)
+    assert man["meta"]["step"] == 3 and man["meta"]["tokens_seen"] == 30
+    # generations stayed sequential; only the last one is on disk
+    assert os.listdir(os.path.join(path, "arrays")) == \
+        [str(man["generation"])]
+
+
+def test_writer_error_reraised_then_cleared(tmp_path, monkeypatch):
+    params, opt = _state()
+    path = str(tmp_path / "ck")
+    boom = RuntimeError("disk on fire")
+
+    def failing(p, data, chunk_bytes):
+        raise boom
+
+    monkeypatch.setattr(CKPT, "_stream_write", failing)
+    mgr = CKPT.CheckpointManager()
+    mgr.request_save(path, params, opt, step=1, tokens_seen=10)
+    mgr.wait()
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        mgr.check()
+    # the error was surfaced once, not latched forever
+    mgr.check()
+    monkeypatch.undo()
+    mgr.request_save(path, params, opt, step=2, tokens_seen=20,
+                     block=True)
+    mgr.finalize()
+    assert _manifest(path)["meta"]["step"] == 2
+
+
+def test_writer_error_surfaces_on_finalize(tmp_path, monkeypatch):
+    params, opt = _state()
+
+    def failing(p, data, chunk_bytes):
+        raise OSError("enospc")
+
+    monkeypatch.setattr(CKPT, "_stream_write", failing)
+    mgr = CKPT.CheckpointManager()
+    mgr.request_save(str(tmp_path / "ck"), params, opt, step=1,
+                     tokens_seen=10)
+    with pytest.raises(OSError, match="enospc"):
+        mgr.finalize()
+
+
+def test_gc_never_deletes_last_committed_generation(tmp_path,
+                                                    monkeypatch):
+    """A save that fails after streaming some shards must leave the
+    previously committed generation on disk and restorable — and the
+    next successful save GCs only the committed predecessor."""
+    params, opt = _state()
+    path = str(tmp_path / "ck")
+    mgr = CKPT.CheckpointManager()
+    mgr.request_save(path, params, opt, step=1, tokens_seen=10,
+                     block=True)
+    gen0 = _manifest(path)["generation"]
+
+    calls = {"n": 0}
+    orig = CKPT._stream_write
+
+    def fail_late(p, data, chunk_bytes):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise OSError("died mid-save")
+        return orig(p, data, chunk_bytes)
+
+    monkeypatch.setattr(CKPT, "_stream_write", fail_late)
+    mgr.request_save(path, params, opt, step=2, tokens_seen=20)
+    mgr.wait()
+    with pytest.raises(OSError, match="died mid-save"):
+        mgr.check()
+    monkeypatch.undo()
+    # committed generation survived the failed save, still restorable
+    assert _manifest(path)["generation"] == gen0
+    assert os.path.isdir(os.path.join(path, "arrays", str(gen0)))
+    _, _, meta = CKPT.restore(path, params, opt, verify=True)
+    assert meta["step"] == 1
+    # and the next good save commits gen+1, GCing exactly gen0
+    mgr.request_save(path, params, opt, step=3, tokens_seen=30,
+                     block=True)
+    mgr.finalize()
+    man = _manifest(path)
+    assert man["generation"] == gen0 + 1 and man["meta"]["step"] == 3
+    assert os.listdir(os.path.join(path, "arrays")) == \
+        [str(gen0 + 1)]
+
+
+def test_snapshot_isolated_from_buffer_donation(tmp_path, monkeypatch):
+    """The request-time snapshot must hold its own device buffers: the
+    step loop's donated next step may invalidate the live state while
+    the writer is still streaming.  Simulated by gating the writer and
+    deleting the original arrays mid-save."""
+    import jax
+    params, opt = _state()
+    path = str(tmp_path / "ck")
+    host = {k: np.asarray(v) for k, v in params.items()}
+    gate = threading.Event()
+    orig = CKPT._stream_write
+
+    def gated(p, data, chunk_bytes):
+        gate.wait(timeout=30)
+        return orig(p, data, chunk_bytes)
+
+    monkeypatch.setattr(CKPT, "_stream_write", gated)
+    mgr = CKPT.CheckpointManager()
+    mgr.request_save(path, params, opt, step=1, tokens_seen=10)
+    for leaf in jax.tree.leaves((params, opt)):
+        leaf.delete()                     # what donation does
+    gate.set()
+    mgr.finalize()
+    t_params = {k: np.zeros_like(v) for k, v in host.items()}
+    t_opt = {"mu": {"w": np.zeros((6, 4), np.float32),
+                    "b": np.zeros((4,), np.float32)},
+             "count": np.int32(0)}
+    p_r, _, _ = CKPT.restore(path, t_params, t_opt, verify=True)
+    for k, v in host.items():
+        assert np.array_equal(np.asarray(p_r[k]), v)

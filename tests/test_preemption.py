@@ -1,0 +1,117 @@
+"""Preemption handling and elastic-resume validation (host-only).
+
+The launcher pieces that need no jax device world: the signal guard's
+stop/grace bookkeeping, the coordinator-connect retry loop, and the
+from-the-resume-point ramp validation that makes elastic resumes onto
+a smaller/larger topology either work or fail with a clear error.
+"""
+import os
+import signal
+
+import pytest
+
+from repro.core.seesaw import build_plan
+from repro.launch.steps import validate_feeding
+from repro.launch.train import (PreemptionGuard,
+                                init_distributed_with_retry)
+
+SEQ = 32
+
+
+def _plan():
+    # batch ramp 8 -> 16 -> 32
+    return build_plan(kind="seesaw", base_lr=1e-3,
+                      total_tokens=SEQ * 8 * 24, warmup_frac=0.0,
+                      b0=8, alpha=2.0, n_cuts=2)
+
+
+class TestRetry:
+    def test_succeeds_after_transient_failures(self):
+        calls, sleeps = [], []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise ConnectionError("coordinator not up yet")
+            return "ok"
+
+        out = init_distributed_with_retry(
+            flaky, attempts=4, backoff=0.5, sleep=sleeps.append,
+            log=lambda *a: None)
+        assert out == "ok" and len(calls) == 3
+        assert sleeps == [0.5, 1.0]        # exponential backoff
+
+    def test_exhaustion_raises_last_error(self):
+        sleeps = []
+
+        def dead():
+            raise ConnectionError("never")
+
+        with pytest.raises(ConnectionError, match="never"):
+            init_distributed_with_retry(
+                dead, attempts=3, backoff=1.0, sleep=sleeps.append,
+                log=lambda *a: None)
+        assert sleeps == [1.0, 2.0]        # no sleep after last try
+
+
+class TestPreemptionGuard:
+    def test_sigterm_requests_stop_within_grace(self):
+        g = PreemptionGuard(grace=30.0).install()
+        try:
+            assert not g.requested() and not g.should_stop()
+            assert g.grace_remaining() == 30.0
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert g.requested() and g.should_stop()
+            assert 0.0 < g.grace_remaining() <= 30.0
+        finally:
+            g.uninstall()
+
+    def test_uninstall_restores_previous_handler(self):
+        seen = []
+        prev = signal.signal(signal.SIGTERM,
+                             lambda *a: seen.append("prev"))
+        try:
+            g = PreemptionGuard().install()
+            g.uninstall()
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert seen == ["prev"]
+            assert not g.requested()
+        finally:
+            signal.signal(signal.SIGTERM, prev)
+
+
+class TestElasticValidateFeeding:
+    def test_whole_ramp_fails_on_too_many_processes(self):
+        # phase 0's global batch 8 cannot split over 16 processes
+        with pytest.raises(ValueError, match="phase 0.*16 host"):
+            validate_feeding(_plan(), None, process_count=16)
+
+    def test_resume_past_infeasible_phase_passes(self):
+        """Elastic resume: 16 processes cannot feed phase 0 (batch 8),
+        but a checkpoint already past the phase-0/1 boundary only needs
+        phases 1+ (batch 16, 32) — validation from the resume point
+        must pass."""
+        plan = _plan()
+        boundary = plan.steps_per_phase(SEQ)[0] * 8 * SEQ
+        validate_feeding(plan, None, process_count=16,
+                         start_tokens=boundary, seq_len=SEQ)
+
+    def test_resume_before_boundary_still_fails(self):
+        plan = _plan()
+        inside0 = 2 * 8 * SEQ              # still in phase 0
+        with pytest.raises(ValueError, match="phase 0.*16 host"):
+            validate_feeding(plan, None, process_count=16,
+                             start_tokens=inside0, seq_len=SEQ)
+
+    def test_resume_cannot_feed_final_phase_names_resume_point(self):
+        # 64 processes can never feed this ramp (max batch 32), even
+        # from the last boundary — the error names the offending phase
+        # AND the resume point
+        plan = _plan()
+        steps = plan.steps_per_phase(SEQ)
+        last = (steps[0] * 8 + steps[1] * 16) * SEQ
+        with pytest.raises(ValueError,
+                           match="phase 2.*64 host.*resuming at "
+                                 "phase 2"):
+            validate_feeding(plan, None, process_count=64,
+                             start_tokens=last, seq_len=SEQ)
