@@ -58,8 +58,8 @@ DISPATCH_LM = ModelConfig(name="engine-lm", arch_type="dense",
 KS = (1, 4, 16)
 
 
-def _cfg(model: ModelConfig, seq: int, b0: int,
-         steps: int) -> RunConfig:
+def _cfg(model: ModelConfig, seq: int, b0: int, steps: int,
+         backend: str = None) -> RunConfig:
     # cosine: single phase (constant chunk shape) AND the legacy loop's
     # op-by-op host LR evaluation is real work in the eager baseline
     return RunConfig(
@@ -67,12 +67,13 @@ def _cfg(model: ModelConfig, seq: int, b0: int,
         schedule=ScheduleConfig(kind="cosine", base_lr=1e-3),
         optimizer=OptimizerConfig(kind="adamw"),
         seq_len=seq, global_batch_size=b0,
-        total_tokens=seq * b0 * steps, remat=False)
+        total_tokens=seq * b0 * steps, remat=False,
+        kernel_backend=backend)
 
 
-def _bench_eager(model, seq, b0, steps) -> float:
+def _bench_eager(model, seq, b0, steps, backend=None) -> float:
     """The legacy loop: host LR + per-step blocking metric transfers."""
-    tr = Trainer(_cfg(model, seq, b0, steps + 1), fuse_steps=1)
+    tr = Trainer(_cfg(model, seq, b0, steps + 1, backend), fuse_steps=1)
     loader = PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, seq,
                              prefetch=0)
     it = iter(loader)
@@ -93,8 +94,8 @@ def _bench_eager(model, seq, b0, steps) -> float:
     return n / (time.perf_counter() - t0)
 
 
-def _bench_fused(model, seq, b0, steps, k):
-    tr = Trainer(_cfg(model, seq, b0, steps + k), fuse_steps=k)
+def _bench_fused(model, seq, b0, steps, k, backend=None):
+    tr = Trainer(_cfg(model, seq, b0, steps + k, backend), fuse_steps=k)
     loader = PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, seq)
     chunks = loader.iter_chunks(k)
     _, stacked, m0 = next(chunks)              # warmup: compile
@@ -115,15 +116,15 @@ def _bench_fused(model, seq, b0, steps, k):
     return n / (time.perf_counter() - t0), len(tr.engine._cache)
 
 
-def _regime(name, model, seq, b0, steps, rows, result):
-    sps_eager = _bench_eager(model, seq, b0, steps)
+def _regime(name, model, seq, b0, steps, rows, result, backend=None):
+    sps_eager = _bench_eager(model, seq, b0, steps, backend)
     rows.append((f"engine/{name}/eager_per_step_sync", 1e6 / sps_eager,
                  f"steps_per_s={sps_eager:.1f}"))
     reg = {"model": model.name, "seq_len": seq, "batch_size": b0,
            "steps": steps, "eager_steps_per_s": round(sps_eager, 2),
            "fused": {}}
     for k in KS:
-        sps, n_exec = _bench_fused(model, seq, b0, steps, k)
+        sps, n_exec = _bench_fused(model, seq, b0, steps, k, backend)
         rows.append((f"engine/{name}/fused_k{k}", 1e6 / sps,
                      f"steps_per_s={sps:.1f} "
                      f"speedup_vs_eager={sps / sps_eager:.2f}x "
@@ -141,7 +142,7 @@ def _regime(name, model, seq, b0, steps, rows, result):
     result[name] = reg
 
 
-def _compile_counts(rows, result):
+def _compile_counts(rows, result, backend=None):
     """Measure the 'one executable per distinct batch size' claim on
     multi-phase ramps at K=16 with step counts that are NOT multiples
     of 16 (tail padding in play).  seesaw ramps through 3 batch sizes
@@ -155,7 +156,8 @@ def _compile_counts(rows, result):
                                     n_cuts=2),
             optimizer=OptimizerConfig(kind="adamw"),
             seq_len=16, global_batch_size=2,
-            total_tokens=16 * 2 * 52, remat=False)
+            total_tokens=16 * 2 * 52, remat=False,
+            kernel_backend=backend)
         tr = Trainer(cfg, fuse_steps=16)
         tr.run(PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, 16))
         out[kind] = {
@@ -172,14 +174,18 @@ def _compile_counts(rows, result):
     result["compiles"] = out
 
 
-def _measure(steps: int = 144):
+def _measure(steps: int = 144, backend: str = None,
+             compiles_only: bool = False):
     steps -= steps % 48          # keep divisible by every K in KS
     steps = max(steps, 48)
     rows, result = [], {}
-    _regime("dispatch", DISPATCH_LM, 16, 1, steps, rows, result)
-    _regime("smoke150m", SEESAW_150M.reduced(), 16, 1,
-            min(steps, 48), rows, result)
-    _compile_counts(rows, result)
+    result["backend"] = backend or "xla"
+    if not compiles_only:
+        _regime("dispatch", DISPATCH_LM, 16, 1, steps, rows, result,
+                backend)
+        _regime("smoke150m", SEESAW_150M.reduced(), 16, 1,
+                min(steps, 48), rows, result, backend)
+    _compile_counts(rows, result, backend)
     return rows, result
 
 
@@ -212,12 +218,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=144)
     ap.add_argument("--out", default="artifacts/bench_engine.json")
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas_interpret"],
+                    help="kernel backend axis (see "
+                         "repro.kernels.backend); default xla")
+    ap.add_argument("--compiles-only", action="store_true",
+                    help="skip the timing regimes, run only the "
+                         "compile-count section (the fast CI gate for "
+                         "non-default backends)")
     ap.add_argument("--check-compiles", action="store_true",
                     help="exit non-zero unless the compiles section "
                          "shows one fused executable per distinct "
                          "batch size (the CI bench-smoke gate)")
     args = ap.parse_args()
-    rows, result = _measure(args.steps)
+    rows, result = _measure(args.steps, backend=args.backend,
+                            compiles_only=args.compiles_only)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

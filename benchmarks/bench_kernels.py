@@ -1,0 +1,361 @@
+"""Per-kernel roofline sweeps + a DMA/compute-overlap profile.
+
+Two sections, one JSON artifact (``artifacts/bench_kernels.json``):
+
+1. **Kernel sweeps** — forward and backward (``jax.grad``) wall-clock
+   for each hot-path op (flash attention, RMSNorm, SSD) across shape /
+   block-size configs, on the selected backend AND the XLA reference
+   path, with analytic FLOP / byte counts so each row places itself on
+   a roofline (``flops_per_byte`` = arithmetic intensity; compare
+   ``achieved_gflops`` against the machine's compute and HBM ceilings).
+   On this CPU container the Pallas numbers run under
+   ``interpret=True`` — they validate the sweep machinery and the
+   *relative* block-size trends, not absolute TPU throughput; re-run
+   with ``--backend pallas`` on real hardware for roofline placement.
+
+2. **Overlap profile** — a streaming normalize kernel (HBM-resident
+   operands, ``memory_space=ANY``) that pipelines row-blocks through
+   VMEM with explicit ``make_async_copy`` in/out queues, swept over
+   (block_rows × buffer_depth) in the style of quad-buffering
+   benchmarks.  Buffer depth 1 serializes DMA against compute; depth
+   ≥ 2 overlaps them — the depth where the curve flattens is the
+   latency-hiding knee.  Configs whose in+out VMEM footprint
+   ``2 · depth · block · d · 4B`` exceeds the VMEM budget are recorded
+   as skipped, not run (the same guard a production kernel needs).
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels \
+        [--backend pallas_interpret] [--ci] \
+        [--out artifacts/bench_kernels.json]
+
+``--ci`` shrinks every sweep to smoke-size so the job finishes in
+seconds on 2 CPU cores (uploaded as ``bench_kernels.ci.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend as KB
+from repro.kernels import ref
+
+VMEM_BUDGET = 16 * 1024 * 1024          # bytes/core, v4/v5-class
+
+
+# --------------------------------------------------------------------- #
+# timing
+# --------------------------------------------------------------------- #
+
+def _time_ms(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall-clock of a jitted callable, compile excluded."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _grad_of(fn, n_in: int):
+    """sum-of-outputs scalarization → grad wrt the first n_in args."""
+    def loss(*a):
+        out = fn(*a)
+        leaves = jax.tree.leaves(out)
+        return sum(jnp.sum(x.astype(jnp.float32)) for x in leaves)
+    return jax.grad(loss, argnums=tuple(range(n_in)))
+
+
+# --------------------------------------------------------------------- #
+# kernel sweeps
+# --------------------------------------------------------------------- #
+
+def _attention_sweep(backend: str, ci: bool):
+    cfgs = ([(1, 4, 2, 128, 64, 64)] if ci else
+            [(1, 4, 2, 256, 64, 64), (1, 4, 2, 256, 64, 128),
+             (1, 8, 2, 512, 64, 128), (2, 4, 4, 256, 64, 64)])
+    rows = []
+    for (B, H, Hkv, S, hd, blk) in cfgs:
+        key = jax.random.PRNGKey(0)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(kk, (B, S, Hkv, hd), jnp.float32)
+        v = jax.random.normal(kv, (B, S, Hkv, hd), jnp.float32)
+
+        def attn(q, k, v, be):
+            return KB.attention(q, k, v, causal=True, backend=be,
+                                block_q=blk, block_k=blk)
+
+        row = {"B": B, "H": H, "Hkv": Hkv, "S": S, "head_dim": hd,
+               "block": blk}
+        # causal: ~half the S² pairs; 2 matmuls (qk, pv), fwd+bwd ≈ 3.5×
+        flops = 2 * 2 * B * H * S * S * hd / 2
+        bytes_moved = 4 * (B * S * hd * (H + 2 * Hkv) * 2)
+        row["gflops_fwd"] = round(flops / 1e9, 3)
+        row["flops_per_byte"] = round(flops / bytes_moved, 1)
+        for be, tag in ((backend, "kernel"), ("xla", "xla")):
+            f = jax.jit(functools.partial(attn, be=be))
+            g = jax.jit(_grad_of(functools.partial(attn, be=be), 3))
+            fwd = _time_ms(f, q, k, v)
+            bwd = _time_ms(g, q, k, v)
+            row[f"{tag}_fwd_ms"] = round(fwd, 3)
+            row[f"{tag}_bwd_ms"] = round(bwd, 3)
+            row[f"{tag}_achieved_gflops"] = round(flops / fwd / 1e6, 2)
+        rows.append(row)
+    return rows
+
+
+def _rmsnorm_sweep(backend: str, ci: bool):
+    cfgs = ([(1024, 256, 256)] if ci else
+            [(4096, 512, 128), (4096, 512, 256), (4096, 512, 512),
+             (16384, 1024, 256)])
+    rows = []
+    from repro.kernels import rmsnorm as RN
+    for (n, d, br) in cfgs:
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (n, d), jnp.float32)
+        s = 0.1 * jax.random.normal(key, (d,), jnp.float32)
+        interp = backend == "pallas_interpret"
+
+        def kern(x, s):
+            if backend == "xla":
+                return ref.rmsnorm_ref(x, s)
+            return RN.rmsnorm(x, s, block_rows=br, interpret=interp)
+
+        row = {"rows": n, "d": d, "block_rows": br}
+        # memory-bound: 1 read + 1 write of (n, d) f32
+        gb = 2 * n * d * 4 / 1e9
+        for fn, tag in ((kern, "kernel"),
+                        (lambda x, s: ref.rmsnorm_ref(x, s), "xla")):
+            f = jax.jit(fn)
+            g = jax.jit(_grad_of(fn, 2))
+            fwd = _time_ms(f, x, s)
+            bwd = _time_ms(g, x, s)
+            row[f"{tag}_fwd_ms"] = round(fwd, 3)
+            row[f"{tag}_bwd_ms"] = round(bwd, 3)
+            row[f"{tag}_gb_per_s"] = round(gb / (fwd / 1e3), 2)
+        rows.append(row)
+    return rows
+
+
+def _ssd_sweep(backend: str, ci: bool):
+    cfgs = ([(1, 128, 2, 32, 16, 32)] if ci else
+            [(1, 256, 4, 64, 32, 64), (1, 256, 4, 64, 32, 128),
+             (2, 512, 4, 64, 32, 128)])
+    rows = []
+    for (B, S, H, P, N, chunk) in cfgs:
+        ks = jax.random.split(jax.random.PRNGKey(2), 6)
+        xh = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.abs(jax.random.normal(ks[2], (H,))) * 0.5
+        Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+        Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+        D = jax.random.normal(ks[5], (H,)) * 0.1
+
+        def kern(*a, be):
+            return KB.ssd(*a, chunk=chunk, backend=be)
+
+        row = {"B": B, "S": S, "H": H, "P": P, "N": N, "chunk": chunk}
+        # intra-chunk quadratic dominates: 2·(CBᵀ) + 2·(M@x) per chunk
+        nc = S // chunk
+        flops = B * H * nc * (2 * chunk * chunk * N
+                              + 2 * chunk * chunk * P)
+        row["gflops_fwd"] = round(flops / 1e9, 3)
+        for be, tag in ((backend, "kernel"), ("xla", "xla")):
+            f = jax.jit(functools.partial(kern, be=be))
+            g = jax.jit(_grad_of(functools.partial(kern, be=be), 6))
+            fwd = _time_ms(f, xh, dt, A, Bm, Cm, D)
+            bwd = _time_ms(g, xh, dt, A, Bm, Cm, D)
+            row[f"{tag}_fwd_ms"] = round(fwd, 3)
+            row[f"{tag}_bwd_ms"] = round(bwd, 3)
+        rows.append(row)
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# DMA/compute-overlap profile
+# --------------------------------------------------------------------- #
+
+def _overlap_kernel(x_ref, o_ref, in_bufs, out_bufs, in_sems, out_sems,
+                    *, block: int, n_blocks: int, depth: int,
+                    eps: float = 1e-5):
+    """Streaming normalize with a depth-deep DMA pipeline.
+
+    x/o live in ANY (HBM); row-block i flows HBM →(in-DMA)→
+    in_bufs[i % depth] →(compute)→ out_bufs[i % depth] →(out-DMA)→ HBM.
+    In-DMA for block i+depth is issued as soon as slot (i % depth)
+    frees; the out-DMA wait for block i−depth gates reuse of the out
+    slot.  depth=1 fully serializes; the overlap win is the measured
+    gap between depth 1 and the knee.
+    """
+
+    def in_dma(i):
+        slot = jax.lax.rem(i, depth)
+        return pltpu.make_async_copy(
+            x_ref.at[pl.ds(i * block, block)],
+            in_bufs.at[slot],
+            in_sems.at[slot])
+
+    def out_dma(i):
+        slot = jax.lax.rem(i, depth)
+        return pltpu.make_async_copy(
+            out_bufs.at[slot],
+            o_ref.at[pl.ds(i * block, block)],
+            out_sems.at[slot])
+
+    # prologue: fill the pipeline
+    for j in range(min(depth, n_blocks)):
+        in_dma(jnp.int32(j)).start()
+
+    def body(i, _):
+        slot = jax.lax.rem(i, depth)
+        in_dma(i).wait()
+        # out slot must have drained before we overwrite it
+        @pl.when(i >= depth)
+        def _drain():
+            out_dma(i - depth).wait()
+        x = in_bufs[slot].astype(jnp.float32)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        out_bufs[slot] = x * jax.lax.rsqrt(var + eps)
+        out_dma(i).start()
+        # refill the in slot we just consumed
+        @pl.when(i + depth < n_blocks)
+        def _refill():
+            in_dma(i + depth).start()
+        return 0
+
+    jax.lax.fori_loop(0, n_blocks, body, 0)
+    # epilogue: drain the last `depth` out-copies
+    start = jnp.maximum(n_blocks - depth, 0)
+
+    def drain(i, _):
+        out_dma(i).wait()
+        return 0
+
+    jax.lax.fori_loop(start, n_blocks, drain, 0)
+
+
+def _overlap_call(x, *, block: int, depth: int, interpret: bool):
+    rows, d = x.shape
+    n_blocks = rows // block
+    kernel = functools.partial(_overlap_kernel, block=block,
+                               n_blocks=n_blocks, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((depth, block, d), jnp.float32),   # in bufs
+            pltpu.VMEM((depth, block, d), jnp.float32),   # out bufs
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def _overlap_profile(backend: str, ci: bool):
+    """(block_rows × buffer_depth) sweep, VMEM-limit aware."""
+    if backend == "xla":
+        return {"skipped": "overlap profile needs a pallas backend"}
+    interpret = backend == "pallas_interpret"
+    rows_total, d = (2048, 256) if ci else (8192, 512)
+    blocks = [128, 256] if ci else [128, 256, 512, 1024]
+    depths = [1, 2] if ci else [1, 2, 4, 8]
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (rows_total, d), jnp.float32)
+    want = ref.rmsnorm_ref(x, jnp.zeros((d,)))   # scale=0 ⇒ pure norm
+    out = {"rows": rows_total, "d": d, "vmem_budget_bytes": VMEM_BUDGET,
+           "configs": []}
+    for block in blocks:
+        if rows_total % block:
+            continue
+        for depth in depths:
+            vmem = 2 * depth * block * d * 4
+            rec = {"block_rows": block, "buffer_depth": depth,
+                   "vmem_bytes": vmem}
+            if vmem > VMEM_BUDGET:
+                rec["skipped"] = "exceeds VMEM budget"
+                out["configs"].append(rec)
+                continue
+            fn = jax.jit(functools.partial(
+                _overlap_call, block=block, depth=depth,
+                interpret=interpret))
+            got = fn(x)
+            rec["max_err"] = float(jnp.abs(got - want).max())
+            rec["ms"] = round(_time_ms(fn, x), 3)
+            gb = 2 * rows_total * d * 4 / 1e9
+            rec["gb_per_s"] = round(gb / (rec["ms"] / 1e3), 2)
+            out["configs"].append(rec)
+    ran = [c for c in out["configs"] if "ms" in c]
+    if ran:
+        best = min(ran, key=lambda c: c["ms"])
+        out["best"] = {k: best[k] for k in
+                       ("block_rows", "buffer_depth", "ms", "gb_per_s")}
+    return out
+
+
+# --------------------------------------------------------------------- #
+# entry points
+# --------------------------------------------------------------------- #
+
+def _measure(backend: str, ci: bool):
+    result = {"backend": backend,
+              "platform": jax.devices()[0].platform,
+              "interpret": backend == "pallas_interpret"}
+    result["attention"] = _attention_sweep(backend, ci)
+    result["rmsnorm"] = _rmsnorm_sweep(backend, ci)
+    result["ssd"] = _ssd_sweep(backend, ci)
+    result["overlap"] = _overlap_profile(backend, ci)
+    return result
+
+
+def run(steps: int = 0):
+    """Harness entry point: CSV rows from a CI-sized sweep."""
+    result = _measure("pallas_interpret", ci=True)
+    rows = []
+    for section in ("attention", "rmsnorm", "ssd"):
+        for r in result[section]:
+            name = f"kernels/{section}/" + "x".join(
+                str(v) for k, v in r.items() if isinstance(v, int))
+            rows.append((name, r["kernel_fwd_ms"] * 1e3,
+                         f"bwd_ms={r['kernel_bwd_ms']}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="pallas_interpret",
+                    choices=["xla", "pallas", "pallas_interpret"],
+                    help="backend for the kernel columns (the xla "
+                         "columns always run for comparison)")
+    ap.add_argument("--ci", action="store_true",
+                    help="smoke-size sweeps (seconds on 2 CPU cores)")
+    ap.add_argument("--out", default="artifacts/bench_kernels.json")
+    args = ap.parse_args()
+    result = _measure(args.backend, args.ci)
+    for section in ("attention", "rmsnorm", "ssd"):
+        for r in result[section]:
+            print(f"{section}: {r}")
+    ov = result["overlap"]
+    for c in ov.get("configs", []):
+        print(f"overlap: {c}")
+    if "best" in ov:
+        print(f"overlap best: {ov['best']}")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"→ {args.out}")
+
+
+if __name__ == "__main__":
+    main()

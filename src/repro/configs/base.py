@@ -70,6 +70,9 @@ class ModelConfig:
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
     act: str = "silu"              # silu (SwiGLU) | gelu
+    # hot-path op backend: xla | pallas | pallas_interpret
+    # (see repro.kernels.backend)
+    kernel_backend: str = "xla"
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
     hybrid: Optional[HybridConfig] = None
@@ -243,11 +246,21 @@ class RunConfig:
     dtype: str = "bfloat16"        # compute dtype; params/opt state f32
     remat: bool = True
     log_every: int = 10
+    # run-level kernel backend override; None keeps model.kernel_backend
+    kernel_backend: Optional[str] = None
 
     def resolved_total_tokens(self) -> int:
         if self.total_tokens:
             return self.total_tokens
         return 20 * self.model.param_count()
+
+    def resolved_model(self) -> ModelConfig:
+        """The model config with the run-level kernel backend applied —
+        what the training engine compiles against."""
+        if (self.kernel_backend is not None
+                and self.kernel_backend != self.model.kernel_backend):
+            return replace(self.model, kernel_backend=self.kernel_backend)
+        return self.model
 
 
 @dataclass(frozen=True)

@@ -1,3 +1,4 @@
-from repro.kernels import flash_attention, ops, ref, rmsnorm, ssd
+from repro.kernels import (backend, flash_attention, ops, ref, rmsnorm,
+                           ssd)
 
-__all__ = ["flash_attention", "ops", "ref", "rmsnorm", "ssd"]
+__all__ = ["backend", "flash_attention", "ops", "ref", "rmsnorm", "ssd"]

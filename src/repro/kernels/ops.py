@@ -1,9 +1,13 @@
 """jit'd public wrappers for the Pallas kernels with automatic fallback.
 
-On TPU the Pallas path compiles natively; elsewhere (this CPU container)
-``interpret=True`` executes the kernel body for correctness validation.
-``use_pallas=False`` (or the REPRO_NO_PALLAS env var) routes to the
-pure-jnp reference — that is the path the distributed dry-run lowers.
+Thin convenience layer over ``repro.kernels.backend``: the backend name
+is picked automatically — ``pallas`` on TPU, ``pallas_interpret``
+elsewhere (this CPU container executes the kernel bodies for
+correctness validation).  ``use_pallas=False`` (or the REPRO_NO_PALLAS
+env var) routes to the pure-jnp reference — that is the path the
+distributed dry-run lowers.  Model code should thread an explicit
+``ModelConfig.kernel_backend`` through ``repro.kernels.backend``
+instead of calling these.
 """
 from __future__ import annotations
 
@@ -11,10 +15,9 @@ import os
 
 import jax
 
+from repro.kernels import backend as _backend
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
-from repro.kernels import rmsnorm as _rn
-from repro.kernels import ssd as _ssd
 
 
 def _on_tpu() -> bool:
@@ -24,30 +27,35 @@ def _on_tpu() -> bool:
         return False
 
 
-def _interpret() -> bool:
-    return not _on_tpu()
+def _auto_backend(use_pallas: bool) -> str:
+    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
+        return "xla"
+    return "pallas" if _on_tpu() else "pallas_interpret"
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     use_pallas: bool = True, block_q: int = 128,
                     block_k: int = 128):
-    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
+    """q: (B, H, S, hd) — the kernels' layout, unlike backend.attention."""
+    b = _auto_backend(use_pallas)
+    if b == "xla":
         return _ref.attention_ref(q, k, v, causal=causal)
     return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_k=block_k, interpret=_interpret())
+                               block_k=block_k,
+                               interpret=_backend._interp(b))
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, use_pallas: bool = True,
             block_rows: int = 256):
-    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
-        return _ref.rmsnorm_ref(x, scale, eps)
-    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
-                       interpret=_interpret())
+    return _backend.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                            backend=_auto_backend(use_pallas))
 
 
 def ssd(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
         use_pallas: bool = True):
-    if not use_pallas or os.environ.get("REPRO_NO_PALLAS"):
+    b = _auto_backend(use_pallas)
+    if b == "xla":
+        # historical ops semantics: the no-pallas fallback is the naive
+        # reference scan, not the chunked XLA path backend.ssd uses
         return _ref.ssd_ref(xh, dt, A, Bm, Cm, D)
-    return _ssd.ssd_full(xh, dt, A, Bm, Cm, D, chunk=chunk,
-                         interpret=_interpret())
+    return _backend.ssd(xh, dt, A, Bm, Cm, D, chunk=chunk, backend=b)

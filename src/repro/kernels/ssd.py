@@ -18,6 +18,7 @@ masks/CB 2·64 KB + outputs ~96 KB ⇒ < 0.5 MB.
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -107,8 +108,8 @@ def ssd_chunk(xh, dt, A, Bm, Cm, *, chunk: int = 128,
     return y, s, t
 
 
-def ssd_full(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
-             interpret: bool = False):
+def _ssd_forward(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
+                 interpret: bool = False):
     """Full SSD output: Pallas intra-chunk terms + XLA cross-chunk scan.
     Mirrors models.mamba2.ssd_chunked (the oracle path)."""
     B, S, H, Pd = xh.shape
@@ -147,3 +148,44 @@ def ssd_full(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
     y = y.reshape(B, S, H, Pd) \
         + D[None, None, :, None] * xh.astype(jnp.float32)
     return y[:, :S_orig].astype(xh.dtype), h_fin.swapaxes(-1, -2)
+
+
+@functools.lru_cache(maxsize=None)
+def _ssd_with_vjp(chunk: int, interpret: bool):
+    """custom_vjp SSD: Pallas forward, XLA-recompute backward.
+
+    The backward re-runs ``models.mamba2.ssd_chunked`` (the XLA oracle
+    path, whose reverse ``lax.scan`` IS the state-gradient scan) under
+    ``jax.vjp`` and pulls the cotangents through it — so the gradient
+    through the Pallas backend is bitwise-equal to the XLA backend's,
+    at the cost of one forward recompute (the standard flash-style
+    trade: recompute beats materializing per-chunk residuals in HBM).
+    """
+
+    @jax.custom_vjp
+    def ssd(xh, dt, A, Bm, Cm, D):
+        return _ssd_forward(xh, dt, A, Bm, Cm, D, chunk=chunk,
+                            interpret=interpret)
+
+    def fwd(xh, dt, A, Bm, Cm, D):
+        out = _ssd_forward(xh, dt, A, Bm, Cm, D, chunk=chunk,
+                           interpret=interpret)
+        return out, (xh, dt, A, Bm, Cm, D)
+
+    def bwd(res, cts):
+        from repro.models.mamba2 import ssd_chunked  # avoid import cycle
+        _, pull = jax.vjp(
+            lambda *a: ssd_chunked(*a, chunk=chunk), *res)
+        return pull(cts)
+
+    ssd.defvjp(fwd, bwd)
+    return ssd
+
+
+def ssd_full(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,
+             interpret: bool = False):
+    """Differentiable full SSD (see ``_ssd_with_vjp``).  Same contract
+    as ``models.mamba2.ssd_chunked`` with ``h0=None``:
+    returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    return _ssd_with_vjp(int(chunk), bool(interpret))(
+        xh, dt, A, Bm, Cm, D)

@@ -253,6 +253,11 @@ def main():
     ap.add_argument("--process-id", type=int, default=None,
                     help="this process's index (or JAX_PROCESS_ID)")
     ap.add_argument("--max-device-batch", type=int, default=None)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["xla", "pallas", "pallas_interpret"],
+                    help="hot-path op backend (attention / rmsnorm / "
+                         "SSD) the fused step compiles against; "
+                         "default: the model config's (xla)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -298,7 +303,8 @@ def main():
                                 beta=args.beta or args.alpha),
         optimizer=OptimizerConfig(kind=args.optimizer),
         seq_len=seq_len, global_batch_size=b0, total_tokens=total,
-        z_loss=args.z_loss, seed=args.seed)
+        z_loss=args.z_loss, seed=args.seed,
+        kernel_backend=args.kernel_backend)
 
     from repro.launch.mesh import make_launch_mesh
     mesh = make_launch_mesh(args.mesh, distributed=distributed)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import backend as KB
 from repro.models.layers import apply_rope, dense_init
 
 Params = Dict[str, Any]
@@ -201,8 +202,13 @@ def _attention_block_skip(q, k, v, qpos, kpos, chunk, scale, kv_len):
 def attn_forward(params: Params, x, *, n_heads: int, n_kv_heads: int,
                  head_dim: int, rope_theta: float, causal: bool = True,
                  window: Optional[int] = None, positions=None,
-                 chunk: int = 1024, block_skip: bool = False):
-    """Training/prefill self-attention over x: (B, S, d)."""
+                 chunk: int = 1024, block_skip: bool = False,
+                 backend: str = "xla"):
+    """Training/prefill self-attention over x: (B, S, d).
+
+    ``backend`` selects the kernel backend for the core attention op
+    (see repro.kernels.backend); sliding-window attention has no Pallas
+    kernel yet, so windowed layers stay on the XLA chunked scan."""
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.arange(S)[None, :]
@@ -214,8 +220,11 @@ def attn_forward(params: Params, x, *, n_heads: int, n_kv_heads: int,
     if rope_theta:
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
-    o = chunked_attention(q, k, v, causal=causal, window=window,
-                          chunk=chunk, block_skip=block_skip)
+    if backend != "xla" and window is None and causal:
+        o = KB.attention(q, k, v, causal=True, backend=backend)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              chunk=chunk, block_skip=block_skip)
     o = o.reshape(B, S, n_heads * head_dim)
     out = o @ params["w_o"].astype(x.dtype)
     return out, (k, v)

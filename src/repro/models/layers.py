@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import backend as KB
+
 Params = Dict[str, Any]
 
 # --------------------------------------------------------------------- #
@@ -57,12 +59,10 @@ def dense_init(key, d_in: int, d_out: int, *, std: Optional[float] = None,
 # norms / activations
 # --------------------------------------------------------------------- #
 
-def rmsnorm(x, scale, eps: float = 1e-5):
-    dtype = x.dtype
-    x = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
-    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
-    return out.astype(dtype)
+def rmsnorm(x, scale, eps: float = 1e-5, backend: str = "xla"):
+    """Delegates to the kernel backend registry; the ``xla`` entry is
+    ``kernels.ref.rmsnorm_ref`` — the single RMSNorm source of truth."""
+    return KB.rmsnorm(x, scale, eps=eps, backend=backend)
 
 
 def act_fn(name: str):

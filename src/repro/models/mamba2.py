@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import backend as KB
 from repro.models.layers import (Params, constrain, cross_entropy_chunked,
                                  dense_init, embed_specs, fsdp_axis,
                                  init_embed, residual_spec, rmsnorm,
@@ -199,8 +200,9 @@ def ssd_step(h, x, dt, A, Bv, Cv, D):
 # mixer forward
 # --------------------------------------------------------------------- #
 
-def mixer_forward(pm: Params, x, cfg: ModelConfig, *, use_kernel=False):
-    """x: (B,S,d) → (B,S,d)."""
+def mixer_forward(pm: Params, x, cfg: ModelConfig):
+    """x: (B,S,d) → (B,S,d).  The SSD scan and the gated output norm run
+    on ``cfg.kernel_backend`` (xla | pallas | pallas_interpret)."""
     s, di, H, Pd, N = _dims(cfg)
     B_, S, _ = x.shape
     z = x @ pm["w_z"].astype(x.dtype)
@@ -215,10 +217,11 @@ def mixer_forward(pm: Params, x, cfg: ModelConfig, *, use_kernel=False):
     xin, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
     xh = xin.reshape(B_, S, H, Pd)
     A = -jnp.exp(pm["A_log"].astype(jnp.float32))
-    y, _ = ssd_chunked(xh, dt, A, Bm, Cm,
-                       pm["D"].astype(jnp.float32), chunk=s.chunk_size)
+    kb = cfg.kernel_backend
+    y, _ = KB.ssd(xh, dt, A, Bm, Cm, pm["D"].astype(jnp.float32),
+                  chunk=s.chunk_size, backend=kb)
     y = y.reshape(B_, S, di)
-    y = rmsnorm(y * jax.nn.silu(z), pm["norm"], cfg.norm_eps)
+    y = rmsnorm(y * jax.nn.silu(z), pm["norm"], cfg.norm_eps, backend=kb)
     return y @ pm["w_out"].astype(x.dtype)
 
 
@@ -265,7 +268,8 @@ def forward_hidden(params: Params, cfg: ModelConfig, tokens, *,
     x = constrain(x, res_spec)
 
     def body(x, pl):
-        h = rmsnorm(x, pl["norm"], cfg.norm_eps)
+        h = rmsnorm(x, pl["norm"], cfg.norm_eps,
+                    backend=cfg.kernel_backend)
         y = mixer_forward(pl["mixer"], h, cfg)
         y = constrain(x + y, res_spec)
         return y, {}
@@ -273,7 +277,8 @@ def forward_hidden(params: Params, cfg: ModelConfig, tokens, *,
     if remat:
         body = jax.checkpoint(body)
     x, _ = jax.lax.scan(body, x, params["layers"])
-    return rmsnorm(x, params["final_norm"], cfg.norm_eps), {}
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps,
+                   backend=cfg.kernel_backend), {}
 
 
 def loss_fn(params, cfg, batch, *, z_loss=0.0, dtype=jnp.bfloat16,

@@ -21,6 +21,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
+from repro.kernels import backend as kernel_backend
 from repro.models.layers import fsdp_axis
 
 Params = Dict[str, Any]
@@ -37,6 +38,9 @@ _FAMILY_MODULE = {
 
 
 def family(cfg: ModelConfig):
+    # fail fast on a bad backend name here, at dispatch time, instead of
+    # deep inside a jitted forward trace
+    kernel_backend.resolve(cfg.kernel_backend)
     return importlib.import_module(_FAMILY_MODULE[cfg.arch_type])
 
 

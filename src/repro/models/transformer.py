@@ -83,15 +83,16 @@ def param_specs(cfg: ModelConfig, multi_pod: bool = False) -> Params:
 def _layer(pl: Params, x, cfg: ModelConfig, *, res_spec,
            block_skip: bool = False, chunk: int = 1024):
     batch_axes = res_spec[0] if isinstance(res_spec, P) else None
-    h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+    kb = cfg.kernel_backend
+    h = rmsnorm(x, pl["norm1"], cfg.norm_eps, backend=kb)
     a, _ = A.attn_forward(pl["attn"], h, n_heads=cfg.n_heads,
                           n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
                           rope_theta=cfg.rope_theta, causal=True,
                           window=cfg.sliding_window, chunk=chunk,
-                          block_skip=block_skip)
+                          block_skip=block_skip, backend=kb)
     x = x + a
     x = constrain(x, res_spec)
-    h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+    h = rmsnorm(x, pl["norm2"], cfg.norm_eps, backend=kb)
     aux = {}
     if cfg.arch_type == "moe":
         f, aux = M.moe_forward(pl["moe"], h, cfg, batch_axes=batch_axes)
@@ -138,7 +139,8 @@ def forward_hidden(params: Params, cfg: ModelConfig, tokens, *,
         else:
             body = jax.checkpoint(body)
     x, auxs = jax.lax.scan(body, x, params["layers"])
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps,
+                backend=cfg.kernel_backend)
     aux = {k: jnp.mean(v) for k, v in auxs.items()} if auxs else {}
     return x, aux
 

@@ -275,6 +275,10 @@ class PhaseEngine:
                  plan: SeesawPlan, *, mesh=None, multi_pod: bool = False,
                  max_device_batch: Optional[int] = None):
         self.cfg = cfg
+        # run-level --kernel-backend override folded into the model
+        # config here, so every compiled step (and its param/opt-state
+        # spec derivation) sees one consistent backend
+        self.model = cfg.resolved_model()
         self.optimizer = optimizer
         self.plan = plan
         self.mesh = mesh
@@ -312,8 +316,8 @@ class PhaseEngine:
 
     def _state_specs(self):
         """(param PartitionSpec tree, opt-state PartitionSpec tree)."""
-        pspec = R.param_specs(self.cfg.model, self.multi_pod)
-        pstruct = param_structs(self.cfg.model)
+        pspec = R.param_specs(self.model, self.multi_pod)
+        pstruct = param_structs(self.model)
         ostruct = jax.eval_shape(self.optimizer.init, pstruct)
         return pspec, opt_state_specs(pspec, ostruct)
 
@@ -362,7 +366,7 @@ class PhaseEngine:
         micro = self.micro_batches(batch_size)
         key = (batch_size, micro, k)
         if key not in self._cache:
-            grad = make_grad_step(self.cfg.model, self.optimizer,
+            grad = make_grad_step(self.model, self.optimizer,
                                   micro_batches=micro,
                                   z_loss=self.cfg.z_loss,
                                   dtype=self.dtype,

@@ -67,7 +67,7 @@ def make_train_step(cfg: RunConfig, optimizer: O.Optimizer, *,
     """Compatibility wrapper over the engine's single step builder:
     step(params, opt_state, batch, lr) → (params, opt_state, metrics)."""
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    return E.make_grad_step(cfg.model, optimizer,
+    return E.make_grad_step(cfg.resolved_model(), optimizer,
                             micro_batches=micro_batches,
                             z_loss=cfg.z_loss, dtype=dtype,
                             remat=cfg.remat, multi_pod=multi_pod)
@@ -97,7 +97,8 @@ class Trainer:
                                     mesh=mesh, multi_pod=multi_pod,
                                     max_device_batch=max_device_batch)
         key = jax.random.PRNGKey(cfg.seed + seed)
-        params = R.init_params(key, cfg.model)
+        # resolved_model() also fail-fasts a bad --kernel-backend here
+        params = R.init_params(key, cfg.resolved_model())
         opt_state = self.optimizer.init(params)
         # single-process runs skip this: jit's in_shardings place the
         # state directly, without a host round-trip of every leaf
