@@ -174,8 +174,44 @@ def _compile_counts(rows, result, backend=None):
     result["compiles"] = out
 
 
+def _adaptive_compiles(rows, result, backend=None):
+    """The compile-count story under *dynamically created* phases: an
+    adaptive-seesaw run whose plateau controller fires at runtime must
+    still compile one K-sized executable per distinct batch size —
+    runtime LR tables mean a cut changes argument values, never
+    programs — plus at most one background pre-warm in flight (counted
+    before the joined thread's program is first dispatched)."""
+    cfg = RunConfig(
+        model=DISPATCH_LM,
+        schedule=ScheduleConfig(kind="adaptive-seesaw", base_lr=1e-2,
+                                warmup_frac=0.02, alpha=2.0, n_cuts=4,
+                                plateau_window=16,
+                                plateau_threshold=2e-2, ema_decay=0.9),
+        optimizer=OptimizerConfig(kind="adamw"),
+        seq_len=16, global_batch_size=2,
+        total_tokens=16 * 2 * 360, remat=False,
+        kernel_backend=backend)
+    tr = Trainer(cfg, fuse_steps=16)
+    tr.run(PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, 16))
+    rec = {
+        "phases": len(tr.plan.phases),
+        "cuts": len(tr.cut_tokens),
+        "distinct_batch_sizes": len(set(tr.plan.batch_sizes())),
+        "executables": len(tr.engine._cache),
+        "prewarms_in_flight": len(tr.engine._prewarm),
+        "chunk_ks": sorted({key[2] for key in tr.engine._cache}),
+        "steps": len(tr.history)}
+    rows.append(("engine/compiles/adaptive",
+                 float(rec["executables"]),
+                 f"cuts={rec['cuts']} "
+                 f"distinct_b={rec['distinct_batch_sizes']} "
+                 f"steps={rec['steps']} k16_only="
+                 f"{rec['chunk_ks'] == [16]}"))
+    result["compiles"]["adaptive"] = rec
+
+
 def _measure(steps: int = 144, backend: str = None,
-             compiles_only: bool = False):
+             compiles_only: bool = False, schedule: str = None):
     steps -= steps % 48          # keep divisible by every K in KS
     steps = max(steps, 48)
     rows, result = [], {}
@@ -186,6 +222,8 @@ def _measure(steps: int = 144, backend: str = None,
         _regime("smoke150m", SEESAW_150M.reduced(), 16, 1,
                 min(steps, 48), rows, result, backend)
     _compile_counts(rows, result, backend)
+    if schedule == "adaptive-seesaw":
+        _adaptive_compiles(rows, result, backend)
     return rows, result
 
 
@@ -203,7 +241,19 @@ def check_compiles(result) -> list:
     a regression here means remainder programs are back."""
     errors = []
     for kind, rec in result["compiles"].items():
-        if rec["executables"] != rec["distinct_batch_sizes"]:
+        if kind == "adaptive":
+            # dynamic phases: one program per distinct batch size plus
+            # at most one background pre-warm still in flight
+            if rec["executables"] > rec["distinct_batch_sizes"] + 1:
+                errors.append(
+                    f"adaptive: {rec['executables']} executables for "
+                    f"{rec['distinct_batch_sizes']} distinct batch "
+                    f"sizes (+1 in-flight pre-warm allowed)")
+            if rec["cuts"] < 1:
+                errors.append(
+                    "adaptive: the plateau controller never fired — "
+                    "the smoke did not exercise dynamic phases")
+        elif rec["executables"] != rec["distinct_batch_sizes"]:
             errors.append(
                 f"{kind}: {rec['executables']} executables for "
                 f"{rec['distinct_batch_sizes']} distinct batch sizes")
@@ -230,9 +280,17 @@ def main():
                     help="exit non-zero unless the compiles section "
                          "shows one fused executable per distinct "
                          "batch size (the CI bench-smoke gate)")
+    ap.add_argument("--schedule", default=None,
+                    choices=["adaptive-seesaw"],
+                    help="add a schedule-specific compiles section: "
+                         "adaptive-seesaw runs the plateau controller "
+                         "live and asserts dynamic phases stay within "
+                         "one executable per distinct batch size "
+                         "(+1 in-flight pre-warm)")
     args = ap.parse_args()
     rows, result = _measure(args.steps, backend=args.backend,
-                            compiles_only=args.compiles_only)
+                            compiles_only=args.compiles_only,
+                            schedule=args.schedule)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -6,19 +6,20 @@ token budget.  The adaptive controller instead fires each (√α LR cut,
 while staying on the Corollary-1 equivalence line.  This demo trains
 the same tiny LM three ways and compares.
 
+Since PR 8 the adaptive controller is a production schedule kind: the
+fused step accumulates a loss EMA on device, the trainer tests it at
+chunk boundaries, and a cut extends the plan and re-chunks the loader
+mid-stream (see docs/adaptive.md).  ``run_adaptive`` below is just the
+ordinary Trainer with ``kind="adaptive-seesaw"``.
+
     PYTHONPATH=src python examples/adaptive_seesaw.py
 """
 import numpy as np
 
 from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
                            ScheduleConfig)
-from repro.core.adaptive import AdaptiveSeesaw
 from repro.data import MarkovLM, PhaseDataLoader
-from repro.optim import optimizers as O
-from repro.train.trainer import Trainer, make_train_step
-
-import jax
-import jax.numpy as jnp
+from repro.train.trainer import Trainer
 
 MODEL = ModelConfig(name="adaptive-demo", arch_type="dense", n_layers=2,
                     d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
@@ -40,41 +41,19 @@ def run_scheduled(kind):
 
 
 def run_adaptive():
-    """Same trainer substrate, cuts chosen online."""
+    """Same trainer substrate, cuts chosen online by the device EMA."""
     cfg = RunConfig(model=MODEL,
-                    schedule=ScheduleConfig(kind="constant", base_lr=3e-3),
+                    schedule=ScheduleConfig(kind="adaptive-seesaw",
+                                            base_lr=3e-3, alpha=2.0,
+                                            n_cuts=4, ema_decay=0.9,
+                                            plateau_window=8,
+                                            plateau_threshold=8e-3),
                     optimizer=OptimizerConfig(kind="adamw"),
                     seq_len=SEQ, global_batch_size=B0,
                     total_tokens=SEQ * B0 * STEPS, remat=False)
-    from repro.models import registry as R
-    opt = O.from_config(cfg.optimizer)
-    params = R.init_params(jax.random.PRNGKey(cfg.seed), MODEL)
-    opt_state = opt.init(params)
-    ctl = AdaptiveSeesaw(alpha=2.0, window=8, rel_threshold=8e-3,
-                         min_steps_between=10, max_cuts=4)
-    src = MarkovLM(512, seed=0)
-    steps = {}
-    tokens = seq_cursor = 0
-    total = SEQ * B0 * STEPS
-    hist = []
-    warmup_tokens = 0.1 * total
-    while tokens < total:
-        B = int(B0 * ctl.batch_multiplier)
-        fn = steps.setdefault(B, jax.jit(
-            make_train_step(cfg, opt), donate_argnums=(0, 1)))
-        batch = {k: jnp.asarray(v) for k, v in
-                 src.sample(seq_cursor, B, SEQ).items()}
-        seq_cursor += B
-        warm = min(tokens / max(warmup_tokens, 1), 1.0)
-        lr = cfg.schedule.base_lr * warm * ctl.lr_scale
-        params, opt_state, metrics = fn(params, opt_state, batch,
-                                        jnp.asarray(lr, jnp.float32))
-        tokens += B * SEQ
-        loss = float(metrics["loss"])
-        hist.append({"loss": loss, "batch_size": B, "tokens": tokens})
-        if tokens > warmup_tokens:
-            ctl.observe(loss)
-    return hist, ctl
+    tr = Trainer(cfg)
+    hist = tr.run(PhaseDataLoader(MarkovLM(512, seed=0), tr.plan, SEQ))
+    return hist, tr.controller
 
 
 if __name__ == "__main__":

@@ -213,14 +213,23 @@ def _pattern(cfg: ModelConfig, n_layers: int) -> Tuple[str, ...]:
 @dataclass(frozen=True)
 class ScheduleConfig:
     """LR×batch schedule — the paper's contribution lives here."""
-    kind: str = "cosine"           # cosine | step | seesaw | seesaw-general | constant
+    kind: str = "cosine"           # cosine | step | seesaw | seesaw-general | constant | adaptive-seesaw
     base_lr: float = 3e-3
     warmup_frac: float = 0.10      # paper: warmup for 10% of tokens
     alpha: float = 2.0             # step-decay factor of the *reference* scheduler
     beta: float = 1.0              # batch multiplier per cut (seesaw: beta = alpha)
-    n_cuts: int = 8                # step-decay approximation depth of cosine
+    n_cuts: int = 8                # step-decay approximation depth of cosine;
+    #                                adaptive-seesaw: max cuts the controller may
+    #                                fire (also sizes the runtime LR table)
     final_lr_frac: float = 0.0
     max_batch_size: Optional[int] = None   # hardware cap on the ramp
+    # adaptive-seesaw controller knobs (ignored by every other kind);
+    # see docs/adaptive.md
+    ema_decay: float = 0.98        # device loss-EMA decay per step
+    plateau_window: int = 50       # steps per plateau test
+    plateau_threshold: float = 2e-3  # relative improvement floor
+    plateau_min_steps: Optional[int] = None  # min steps between cuts
+    #                                          (None ⇒ plateau_window)
 
 
 @dataclass(frozen=True)

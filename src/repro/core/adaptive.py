@@ -10,26 +10,51 @@ has extracted its bias reduction and the iterate noise floor dominates
 
 This removes the need to know the total token budget in advance — the
 schedule becomes budget-free, which matters for continued-pretraining
-runs.  Validated on the exact recursions in tests/test_adaptive.py: the
-adaptive trigger lands its cuts near the cosine-derived points and
+runs.  Validated on the exact recursions in tests/test_cbs_adaptive.py
+(the adaptive trigger lands its cuts near the cosine-derived points and
 matches the final risk of the prescheduled Seesaw within a constant
-factor (Corollary 1 applies phase-by-phase regardless of *when* the
-cuts fire, as long as α√β is maintained).
+factor — Corollary 1 applies phase-by-phase regardless of *when* the
+cuts fire, as long as α√β is maintained) and on the fused engine in
+tests/test_adaptive_engine.py (``--schedule adaptive-seesaw``, see
+docs/adaptive.md).
+
+Two observation modes share one plateau test:
+
+- ``observe(loss)`` — host-side exact recursions feed every raw loss;
+  the window mean is computed here.
+- ``observe_smoothed(ema, n_steps)`` — the production engine path: the
+  fused K-step executable accumulates a loss EMA *on device* inside its
+  ``lax.scan`` carry and surfaces one scalar per chunk.  The controller
+  advances its step count by the chunk's real steps and runs the
+  plateau test whenever a window boundary has been crossed, comparing
+  the EMA now against the EMA one window ago.  Decisions therefore
+  land on chunk boundaries — exactly where the trainer can re-chunk
+  the loader and extend the plan.
+
+A cut requires *fresh* plateau evidence: the controller arms on a
+window that improved by at least ``rel_threshold`` (descending) and
+fires on the first subsequent window that does not.  Firing disarms and
+clears the window state, so a forever-flat stream produces exactly one
+cut per plateau — not one per window (the pre-fix behaviour: the
+stale ``_prev_window_mean`` kept re-triggering every ``window`` steps).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 @dataclass
 class AdaptiveSeesaw:
     """Plateau-triggered Seesaw controller.
 
-    Feed ``observe(loss)`` once per step; read ``lr_scale`` /
-    ``batch_multiplier``.  A cut fires when the EMA'd loss improvement
-    per window drops below ``rel_threshold`` of the loss scale.
+    Feed ``observe(loss)`` once per step (or ``observe_smoothed`` once
+    per fused chunk); read ``lr_scale`` / ``batch_multiplier``.  A cut
+    fires when a window's loss improvement drops below
+    ``rel_threshold`` of the loss scale *after* at least one window
+    showed real improvement (the armed state) — each cut needs fresh
+    descend-then-plateau evidence.
     """
     alpha: float = 2.0                 # reference decay per cut
     window: int = 50                   # steps per plateau test
@@ -42,6 +67,8 @@ class AdaptiveSeesaw:
     last_cut_step: int = 0
     _window_losses: List[float] = field(default_factory=list)
     _prev_window_mean: Optional[float] = None
+    _window_start: int = 0             # step the current window opened
+    _armed: bool = True                # saw improvement since last cut
     cut_steps: List[int] = field(default_factory=list)
 
     @property
@@ -52,6 +79,36 @@ class AdaptiveSeesaw:
     def batch_multiplier(self) -> float:
         return self.alpha ** self.n_cuts
 
+    # -- the one plateau test ------------------------------------------- #
+    def _test_window(self, mean: float) -> bool:
+        """Compare this window's smoothed loss against the previous
+        window's; fire if armed and the improvement stalled.  Firing
+        resets ``_prev_window_mean`` (fresh evidence required) and
+        disarms until a window improves again."""
+        fired = False
+        if self._prev_window_mean is not None:
+            improvement = self._prev_window_mean - mean
+            scale = max(abs(self._prev_window_mean), 1e-12)
+            improving = improvement >= self.rel_threshold * scale
+            if improving:
+                self._armed = True
+            elif (self._armed
+                    and self.n_cuts < self.max_cuts
+                    and self.steps - self.last_cut_step
+                    >= self.min_steps_between):
+                self.n_cuts += 1
+                self.last_cut_step = self.steps
+                self.cut_steps.append(self.steps)
+                self._armed = False
+                fired = True
+        self._window_start = self.steps
+        # a fired cut changes the (lr, batch) operating point: the next
+        # comparison must be between two post-cut windows, not against
+        # the pre-cut plateau (the chain-fire bug)
+        self._prev_window_mean = None if fired else mean
+        return fired
+
+    # -- per-step host path --------------------------------------------- #
     def observe(self, loss: float) -> bool:
         """Returns True if a cut fires at this step."""
         self.steps += 1
@@ -60,17 +117,43 @@ class AdaptiveSeesaw:
             return False
         mean = sum(self._window_losses) / len(self._window_losses)
         self._window_losses.clear()
-        fired = False
-        if (self._prev_window_mean is not None
-                and self.n_cuts < self.max_cuts
-                and self.steps - self.last_cut_step
-                >= self.min_steps_between):
-            improvement = self._prev_window_mean - mean
-            scale = max(abs(self._prev_window_mean), 1e-12)
-            if improvement < self.rel_threshold * scale:
-                self.n_cuts += 1
-                self.last_cut_step = self.steps
-                self.cut_steps.append(self.steps)
-                fired = True
-        self._prev_window_mean = mean
-        return fired
+        return self._test_window(mean)
+
+    # -- per-chunk engine path ------------------------------------------ #
+    def observe_smoothed(self, ema: float, n_steps: int) -> bool:
+        """Chunk-boundary observation: the device-accumulated loss EMA
+        after advancing ``n_steps`` real steps.  Runs the plateau test
+        once per crossed window boundary (a chunk larger than a window
+        still tests once — the EMA already summarizes the span).
+        Returns True if a cut fires at this boundary."""
+        self.steps += int(n_steps)
+        if self.steps - self._window_start < self.window:
+            return False
+        return self._test_window(float(ema))
+
+    # -- checkpointing --------------------------------------------------- #
+    def state_dict(self) -> Dict:
+        """JSON-able controller state for the checkpoint manifest —
+        everything needed to replay the adaptive run bitwise from a
+        resume (window phase included, so a checkpoint taken between
+        two cuts re-fires the later cuts at identical steps)."""
+        return {"n_cuts": self.n_cuts, "steps": self.steps,
+                "last_cut_step": self.last_cut_step,
+                "window_losses": list(self._window_losses),
+                "prev_window_mean": self._prev_window_mean,
+                "window_start": self._window_start,
+                "armed": self._armed,
+                "cut_steps": list(self.cut_steps)}
+
+    def load_state_dict(self, state: Dict) -> "AdaptiveSeesaw":
+        self.n_cuts = int(state["n_cuts"])
+        self.steps = int(state["steps"])
+        self.last_cut_step = int(state["last_cut_step"])
+        self._window_losses = [float(x)
+                               for x in state.get("window_losses", [])]
+        pw = state.get("prev_window_mean")
+        self._prev_window_mean = None if pw is None else float(pw)
+        self._window_start = int(state.get("window_start", 0))
+        self._armed = bool(state.get("armed", True))
+        self.cut_steps = [int(s) for s in state["cut_steps"]]
+        return self

@@ -136,6 +136,38 @@ def piecewise_lr(base_lr: float, warmup_tokens: float,
     return lr
 
 
+def adaptive_piecewise_lr(base_lr: float,
+                          warmup_tokens: float) -> Callable:
+    """Runtime-table variant of :func:`piecewise_lr` for plans that are
+    extended while the run is live (adaptive Seesaw).
+
+    The phase table — realized cut steps, cut tokens and per-phase LR
+    scales — arrives as *traced arguments* instead of compile-time
+    constants, so firing a cut changes argument values, never the
+    compiled program: the engine's one-executable-per-distinct-batch-
+    size invariant survives dynamically-created phases (including a
+    ``max_batch_size``-clamped ramp, where a cut changes the LR but not
+    the batch size, i.e. not the executable).  Tables have a fixed
+    width (max cuts + slack); unused cut slots are padded with
+    ``INT32_MAX`` / ``+inf`` ends and repeat the last scale, so padding
+    never selects a phase.
+
+    Cut selection mirrors :func:`piecewise_lr`'s two exactness tiers:
+    exact int32 compare on the global ``step`` when it is known
+    (``step >= 0``), f32 token compare as the ``step < 0`` fallback
+    (host probes) — exact only below 2^24 tokens."""
+
+    def lr(tok, step, cut_steps, cut_tokens, scales):
+        tok = jnp.asarray(tok, jnp.float32)
+        step = jnp.asarray(step, jnp.int32)
+        k_tok = jnp.sum(tok >= cut_tokens)
+        k = jnp.where(step >= 0, jnp.sum(step >= cut_steps), k_tok)
+        warm = base_lr * tok / jnp.maximum(warmup_tokens, 1.0)
+        return jnp.where(tok < warmup_tokens, warm, base_lr * scales[k])
+
+    return lr
+
+
 def constant_lr(base_lr: float, warmup_tokens: float = 0.0) -> Callable:
     def lr(tok, step=None):
         tok = jnp.asarray(tok, jnp.float32)

@@ -15,6 +15,7 @@ Guarantees enforced here (paper §3):
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
@@ -35,6 +36,14 @@ class Phase:
         return self.end_tokens - self.start_tokens
 
     def n_steps(self, seq_len: int) -> int:
+        """Standalone estimate from this phase's ideal token span.
+        ``SeesawPlan.steps_per_phase`` is the AUTHORITATIVE allocation:
+        it threads a token carry across phases so the plan total is
+        conserved exactly, and a single phase's count there can differ
+        from this rounding by ±1.  Anything that must agree with the
+        loader / device LR (chunking, resume, realized boundaries)
+        must use the plan-level method; this per-phase estimate is for
+        isolated reporting only."""
         return max(int(round(self.tokens / (self.batch_size * seq_len))), 1)
 
 
@@ -125,14 +134,66 @@ class SeesawPlan:
         assert self.phases, "empty plan"
         tol = 1e-6 * self.total_tokens
         assert abs(self.phases[-1].end_tokens - self.total_tokens) <= tol
+        for p in self.phases:
+            if p.end_tokens - p.start_tokens <= 0:
+                raise ValueError(
+                    f"phase {p.index} has non-positive token span "
+                    f"[{p.start_tokens}, {p.end_tokens}) — the cut "
+                    f"points are out of order or past total_tokens")
         for a, b in zip(self.phases, self.phases[1:]):
             assert abs(a.end_tokens - b.start_tokens) <= tol
             assert b.batch_size >= a.batch_size, "batch must not shrink"
-        if self.beta > 1.0 and self.alpha < math.sqrt(self.beta) - 1e-9:
+        # Lemma-4 feasibility — except for 'naive-ramp', which is the
+        # paper's DELIBERATELY divergent Figure-5 baseline (batch ×β
+        # with no LR cut); it still gets the structural checks above
+        if (self.kind != "naive-ramp" and self.beta > 1.0
+                and self.alpha < math.sqrt(self.beta) - 1e-9):
             raise ValueError(
                 f"divergent ramp (Lemma 4): alpha={self.alpha} < "
                 f"sqrt(beta)={math.sqrt(self.beta)}")
         return self
+
+    # -- live extension (adaptive Seesaw) ------------------------------- #
+    def extend_at(self, cut_tokens: int, *, seq_len: int,
+                  max_batch_size: Optional[int] = None) -> "SeesawPlan":
+        """A new plan with the last phase cut at ``cut_tokens`` and a
+        fresh (LR ÷ α, batch × β) phase appended to ``total_tokens`` —
+        how an :class:`repro.core.adaptive.AdaptiveSeesaw` cut turns
+        the plan into a live object mid-run.
+
+        ``cut_tokens`` must land on a *realized step boundary* of the
+        last phase (the trainer fires cuts at chunk boundaries, which
+        are step boundaries by construction), strictly inside it — so
+        the re-chunked loader, the runtime LR table and the checkpoint
+        resume all agree on the same integer boundary.  The extended
+        plan is re-validated (token conservation, ordering, Lemma 4).
+        ``max_batch_size`` clamps the appended phase's batch (the ramp
+        saturates; the LR keeps cutting)."""
+        last = self.phases[-1]
+        cut = int(cut_tokens)
+        realized_start = 0
+        for p, n in zip(self.phases[:-1],
+                        self.steps_per_phase(seq_len)[:-1]):
+            realized_start += n * p.batch_size * seq_len
+        tok_per_step = last.batch_size * seq_len
+        if not realized_start < cut < self.total_tokens:
+            raise ValueError(
+                f"cut at {cut} tokens is outside the open last phase "
+                f"({realized_start}, {self.total_tokens:.0f})")
+        if (cut - realized_start) % tok_per_step:
+            raise ValueError(
+                f"cut at {cut} tokens is not on a step boundary of "
+                f"phase {last.index} (B={last.batch_size}, "
+                f"seq_len={seq_len}: {tok_per_step} tokens/step)")
+        new_b = int(round(last.batch_size * self.beta))
+        if max_batch_size:
+            new_b = min(new_b, max_batch_size)
+        phases = list(self.phases[:-1])
+        phases.append(dataclasses.replace(last, end_tokens=float(cut)))
+        phases.append(Phase(last.index + 1, float(cut),
+                            self.total_tokens,
+                            last.lr_scale / self.alpha, new_b))
+        return dataclasses.replace(self, phases=phases).validate()
 
 
 def divergence_risk(alpha: float, beta: float) -> bool:
@@ -169,17 +230,52 @@ def build_plan(*, kind: str, base_lr: float, total_tokens: float,
                         (validated against Lemma 4).
       'constant'      — constant LR, constant batch (Figure 5 baseline).
       'naive-ramp'    — constant LR, batch ×β per cut (Figure 5 blue).
+      'adaptive-seesaw' — budget-free plateau-triggered Seesaw: starts
+                        as a single (LR 1.0, batch B0) phase;
+                        :meth:`SeesawPlan.extend_at` appends a
+                        (÷√α LR, ×α batch) phase each time the
+                        :class:`repro.core.adaptive.AdaptiveSeesaw`
+                        controller fires (``total_tokens`` is the run
+                        horizon, not a schedule input).
+
+    Every kind is validated (token conservation, phase ordering; the
+    Lemma-4 feasibility check no-ops when β ≤ 1).  An explicit
+    ``cut_tokens`` list must be strictly increasing and lie strictly
+    inside ``(warmup, total_tokens)`` — malformed cuts raise instead
+    of silently building a plan with dropped or reordered phases.
     """
     warmup = warmup_frac * total_tokens
     if cut_tokens is None:
         cut_tokens = S.cosine_cut_points(total_tokens, warmup, alpha,
                                          n_cuts, quarter=quarter_cosine)
+    elif kind not in ("cosine", "adaptive-seesaw"):
+        explicit = [float(c) for c in cut_tokens]
+        for a, b in zip(explicit, explicit[1:]):
+            if b <= a:
+                raise ValueError(
+                    f"cut_tokens must be strictly increasing: "
+                    f"{b} follows {a}")
+        bad = [c for c in explicit if not warmup < c < total_tokens]
+        if bad:
+            raise ValueError(
+                f"cut_tokens {bad} outside the open interval "
+                f"(warmup={warmup:.0f}, total_tokens="
+                f"{total_tokens:.0f})")
     cuts = [c for c in cut_tokens if warmup < c < total_tokens]
 
     if kind == "cosine":
         phases = [Phase(0, 0.0, total_tokens, 1.0, b0)]
         return SeesawPlan(base_lr, warmup, total_tokens, phases,
                           alpha=1.0, beta=1.0, kind=kind).validate()
+
+    if kind == "adaptive-seesaw":
+        # cuts are decided at runtime by the plateau controller; the
+        # plan records the per-cut (α_s=√α, β=α) factors extend_at
+        # applies, keeping α_s√β = α (Corollary 1) like 'seesaw'
+        phases = [Phase(0, 0.0, total_tokens, 1.0, b0)]
+        return SeesawPlan(base_lr, warmup, total_tokens, phases,
+                          alpha=math.sqrt(alpha), beta=alpha,
+                          kind=kind).validate()
 
     if kind == "constant":
         lr_cut, b_mult = 1.0, 1.0
@@ -206,11 +302,11 @@ def build_plan(*, kind: str, base_lr: float, total_tokens: float,
         phases.append(Phase(i, bounds[i], bounds[i + 1],
                             lr_cut ** (-i), bs))
         b *= b_mult
-    plan = SeesawPlan(base_lr, warmup, total_tokens, phases,
-                      alpha=lr_cut, beta=b_mult, kind=kind)
-    if kind in ("seesaw", "seesaw-general"):
-        plan.validate()
-    return plan
+    # validate EVERY kind — 'step'/'constant'/'naive-ramp' used to skip
+    # this, so malformed explicit cut lists built silently; the Lemma-4
+    # check inside no-ops for β ≤ 1
+    return SeesawPlan(base_lr, warmup, total_tokens, phases,
+                      alpha=lr_cut, beta=b_mult, kind=kind).validate()
 
 
 # --------------------------------------------------------------------- #

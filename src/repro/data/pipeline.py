@@ -181,6 +181,21 @@ class PhaseDataLoader:
                                    start_phase=self._start[0])
         return self
 
+    def rechunk(self, plan, tokens_seen) -> "PhaseDataLoader":
+        """Swap in an extended plan mid-stream (an adaptive Seesaw cut)
+        and reposition to the exact ``tokens_seen`` boundary.  The
+        sequence stream is indexed by *absolute* sequence number, so
+        the examples after the cut are the same ones the old plan would
+        have produced — only the batch grouping changes.  A live
+        ``iter_chunks`` generator keeps its creation-time position;
+        create a fresh one after rechunking (the trainer's re-chunk
+        loop does), and the old prefetch thread parks harmlessly on its
+        queue.  Per-host feasibility of the *remaining* phases is
+        re-validated, so a cut that creates an unfeedable ramp stage
+        fails here — at cut time — rather than mid-ramp."""
+        self.plan = plan
+        return self.resume(tokens_seen)
+
     # -- sharding -------------------------------------------------------- #
     def _batch_axes(self):
         return ("pod", "data") if self.multi_pod else ("data",)

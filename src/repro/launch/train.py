@@ -199,9 +199,28 @@ def main():
     ap.add_argument("--arch", default="seesaw-150m")
     ap.add_argument("--schedule", default="seesaw",
                     choices=["seesaw", "cosine", "step", "constant",
-                             "seesaw-general", "naive-ramp"])
+                             "seesaw-general", "naive-ramp",
+                             "adaptive-seesaw"])
     ap.add_argument("--alpha", type=float, default=2.0)
     ap.add_argument("--beta", type=float, default=None)
+    # adaptive-seesaw controller knobs (ignored by other schedules;
+    # see docs/adaptive.md)
+    ap.add_argument("--ema-decay", type=float, default=0.98,
+                    help="device loss-EMA decay per step")
+    ap.add_argument("--plateau-window", type=int, default=50,
+                    help="steps per plateau test")
+    ap.add_argument("--plateau-threshold", type=float, default=2e-3,
+                    help="relative improvement below which a window "
+                         "counts as a plateau")
+    ap.add_argument("--plateau-min-steps", type=int, default=None,
+                    help="minimum steps between cuts (default: one "
+                         "plateau window)")
+    ap.add_argument("--max-cuts", type=int, default=8,
+                    help="adaptive: most cuts the controller may fire "
+                         "(sizes the runtime LR table); prescheduled: "
+                         "step-decay approximation depth")
+    ap.add_argument("--max-batch-size", type=int, default=None,
+                    help="hardware cap on the batch ramp")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--batch-size", type=int, default=None)
     ap.add_argument("--seq-len", type=int, default=None)
@@ -300,7 +319,13 @@ def main():
         model=model,
         schedule=ScheduleConfig(kind=args.schedule, base_lr=args.lr,
                                 alpha=args.alpha,
-                                beta=args.beta or args.alpha),
+                                beta=args.beta or args.alpha,
+                                n_cuts=args.max_cuts,
+                                max_batch_size=args.max_batch_size,
+                                ema_decay=args.ema_decay,
+                                plateau_window=args.plateau_window,
+                                plateau_threshold=args.plateau_threshold,
+                                plateau_min_steps=args.plateau_min_steps),
         optimizer=OptimizerConfig(kind=args.optimizer),
         seq_len=seq_len, global_batch_size=b0, total_tokens=total,
         z_loss=args.z_loss, seed=args.seed,

@@ -947,6 +947,25 @@ def restore(path: str, params_template, opt_template, *,
         f"(sharded directory) nor {base}.npz (legacy single-file)")
 
 
+def read_meta(path: str) -> Dict[str, Any]:
+    """Read ONLY a checkpoint's metadata — no array IO.  The adaptive
+    trainer needs this *before* :func:`restore_phase_checkpoint`: the
+    saved controller state (``meta["adaptive"]``) determines the
+    extended plan the phase/batch validation must run against."""
+    base = _base(path)
+    manifest = os.path.join(base, "manifest.json")
+    if os.path.exists(manifest):
+        with open(manifest) as f:
+            return json.load(f)["meta"]
+    legacy = base + ".meta.json"
+    if os.path.exists(legacy):
+        with open(legacy) as f:
+            return json.load(f)
+    raise FileNotFoundError(
+        f"no checkpoint at {path!r}: neither {base}/manifest.json "
+        f"(sharded directory) nor {base}.meta.json (legacy)")
+
+
 def exact_tokens(tokens_seen) -> int:
     """A checkpoint's ``tokens_seen`` as an exact int.  Post-PR-4
     metadata is already an arbitrary-precision JSON int and must NOT

@@ -46,6 +46,10 @@ class TrainState:
     # device only ever sees a once-rounded f32 base plus an int32
     # per-chunk offset, so the carry never drifts however long the run
     tokens_seen: int = 0
+    # adaptive-seesaw only: the device-accumulated loss EMA after the
+    # last chunk (None = unseeded); carried into the next chunk and
+    # through checkpoints so resume replays the controller bitwise
+    loss_ema: Optional[float] = None
 
 
 def _place_like(tree, shardings):
@@ -92,6 +96,24 @@ class Trainer:
             beta=(sch.beta if sch.kind in ("seesaw-general", "naive-ramp")
                   else None),
             n_cuts=sch.n_cuts, max_batch_size=sch.max_batch_size)
+        # the adaptive plan grows at runtime; keep the single-phase
+        # seed so a resume can rebuild the extended plan by replaying
+        # the checkpointed cut tokens through extend_at
+        self._base_plan = self.plan
+        self.controller = None
+        self.cut_tokens: List[int] = []
+        if sch.kind == "adaptive-seesaw":
+            from repro.core.adaptive import AdaptiveSeesaw
+            mn = getattr(sch, "plateau_min_steps", None)
+            self.controller = AdaptiveSeesaw(
+                alpha=sch.alpha,
+                window=int(getattr(sch, "plateau_window", 50)),
+                rel_threshold=float(getattr(sch, "plateau_threshold",
+                                            2e-3)),
+                max_cuts=int(sch.n_cuts),
+                min_steps_between=int(
+                    mn if mn is not None
+                    else getattr(sch, "plateau_window", 50)))
         self.optimizer = O.from_config(cfg.optimizer)
         self.engine = E.PhaseEngine(cfg, self.optimizer, self.plan,
                                     mesh=mesh, multi_pod=multi_pod,
@@ -120,8 +142,10 @@ class Trainer:
         """Host-side probe of the exact curve the jitted step evaluates
         on device (``engine.plan_lr_fn`` — piecewise cuts land on the
         realized step-quantized phase boundaries, not the plan's ideal
-        token cut points)."""
-        return float(self.engine.lr_fn(tokens))
+        token cut points).  For adaptive plans the engine supplies the
+        current runtime LR tables, so this reflects every cut fired so
+        far."""
+        return self.engine.host_lr(tokens)
 
     def _micro(self, batch_size: int) -> int:
         return self.engine.micro_batches(batch_size)
@@ -144,10 +168,11 @@ class Trainer:
         ``block=False`` snapshots the state on device and returns
         immediately while the :attr:`checkpoint_manager`'s writer
         thread streams it to disk."""
+        extra = self._adaptive_extra()
         if not block:
             self.checkpoint_manager.request_save(
                 path, self.state.params, self.state.opt_state,
-                self.state.step, self.state.tokens_seen)
+                self.state.step, self.state.tokens_seen, extra)
             return
         if self._ckpt_manager is not None:
             # an in-flight async save of an older snapshot must land
@@ -156,8 +181,20 @@ class Trainer:
         CKPT.save_phase_checkpoint(path, self.state.params,
                                    self.state.opt_state, self.state.step,
                                    self.state.tokens_seen, plan=self.plan,
-                                   seq_len=self.cfg.seq_len,
+                                   seq_len=self.cfg.seq_len, extra=extra,
                                    chunk_bytes=chunk_bytes)
+
+    def _adaptive_extra(self) -> Optional[Dict[str, Any]]:
+        """Checkpoint metadata that lets a resume replay the adaptive
+        run bitwise: the controller's window state, every cut's token
+        boundary (to rebuild the extended plan), and the carried loss
+        EMA."""
+        if self.controller is None:
+            return None
+        return {"adaptive": {
+            "controller": self.controller.state_dict(),
+            "cut_tokens": list(self.cut_tokens),
+            "loss_ema": self.state.loss_ema}}
 
     def restore_checkpoint(self, path: str,
                            verify: bool = False) -> Dict[str, Any]:
@@ -167,7 +204,36 @@ class Trainer:
         processes — no host ever holds a full replica of a sharded
         leaf.  The save-time topology need not match this run's
         (elastic resume).  ``verify=True`` checks every block's crc32
-        first."""
+        first.
+
+        An adaptive trainer first reads the checkpoint's metadata
+        alone: the saved cut tokens rebuild the extended plan (by
+        replaying :meth:`SeesawPlan.extend_at` from the single-phase
+        base plan), and the controller's window state is reloaded — so
+        the phase/batch validation below runs against the plan the run
+        actually had at save time, and subsequent cuts re-fire at
+        identical steps."""
+        if self.controller is not None:
+            ad = CKPT.read_meta(path).get("adaptive")
+            if ad is None:
+                raise ValueError(
+                    f"checkpoint {path!r} carries no adaptive "
+                    f"controller state — it was saved by a "
+                    f"prescheduled run and cannot resume an "
+                    f"adaptive-seesaw trainer")
+            plan = self._base_plan
+            for ct in ad["cut_tokens"]:
+                plan = plan.extend_at(
+                    int(ct), seq_len=self.cfg.seq_len,
+                    max_batch_size=self.cfg.schedule.max_batch_size)
+            self.plan = plan
+            self.engine.update_plan(plan)
+            if self._ckpt_manager is not None:
+                self._ckpt_manager.plan = plan
+            self.controller.load_state_dict(ad["controller"])
+            self.cut_tokens = [int(ct) for ct in ad["cut_tokens"]]
+            ema = ad.get("loss_ema")
+            self.state.loss_ema = None if ema is None else float(ema)
         p, s, meta = CKPT.restore_phase_checkpoint(
             path, self.state.params, self.state.opt_state, plan=self.plan,
             seq_len=self.cfg.seq_len,
@@ -280,31 +346,97 @@ class Trainer:
         a final save/resume is bitwise-consistent.  In multi-process
         runs all of these fire at the same boundary on every process
         (the chunk stream is deterministic and save/stop decisions are
-        functions of the shared step count)."""
+        functions of the shared step count).
+
+        Adaptive plans add one decision per chunk boundary: the fused
+        step's device loss EMA is transferred (one scalar — the
+        controller's entire per-chunk host traffic) and fed to the
+        plateau controller; a fired cut extends the plan, re-chunks
+        the loader from this exact token boundary and restarts the
+        chunk stream (the outer loop).  The cut decision runs *before*
+        the boundary's save, so a checkpoint always captures the
+        post-decision plan and controller — resume replays the
+        remaining cuts at identical steps."""
         st = self.state
         t0 = time.time()
         le = max(self.cfg.log_every, 1)
         se = max(save_every, 1) if save_every else None
         pending: List[Tuple] = []
-        for phase, stacked, n in self._chunks(loader, max_steps):
-            if self._ckpt_manager is not None:
-                self._ckpt_manager.check()
-            params, opt_state, metrics = self.engine.run_chunk(
-                st.params, st.opt_state, st.tokens_seen, stacked,
-                n_valid=n, step=st.step)
-            base_step, base_tok = st.step, st.tokens_seen
-            st.params, st.opt_state = params, opt_state
-            st.step += n
-            st.tokens_seen += n * phase.batch_size * self.cfg.seq_len
-            pending.append((base_step, base_tok, phase,
-                            time.time() - t0, metrics, n))
-            if st.step // le > base_step // le:
-                self._flush(pending, log_cb)
-            if (se and checkpoint_path
-                    and st.step // se > base_step // se):
-                self.save_checkpoint(checkpoint_path,
-                                     block=not async_save)
-            if stop_fn is not None and stop_fn():
-                break
+        stop = False
+        rechunk = True
+        while rechunk and not stop:
+            rechunk = False
+            for phase, stacked, n in self._chunks(loader, max_steps):
+                if self._ckpt_manager is not None:
+                    self._ckpt_manager.check()
+                out = self.engine.run_chunk(
+                    st.params, st.opt_state, st.tokens_seen, stacked,
+                    n_valid=n, step=st.step, loss_ema=st.loss_ema)
+                if self.controller is not None:
+                    params, opt_state, metrics, ema = out
+                    st.loss_ema = float(jax.device_get(ema))
+                else:
+                    params, opt_state, metrics = out
+                base_step, base_tok = st.step, st.tokens_seen
+                st.params, st.opt_state = params, opt_state
+                st.step += n
+                st.tokens_seen += n * phase.batch_size * self.cfg.seq_len
+                pending.append((base_step, base_tok, phase,
+                                time.time() - t0, metrics, n))
+                if (self.controller is not None
+                        and self.controller.observe_smoothed(
+                            st.loss_ema, n)):
+                    self._fire_cut(loader, stacked)
+                    rechunk = True
+                if st.step // le > base_step // le:
+                    self._flush(pending, log_cb)
+                if (se and checkpoint_path
+                        and st.step // se > base_step // se):
+                    self.save_checkpoint(checkpoint_path,
+                                         block=not async_save)
+                if stop_fn is not None and stop_fn():
+                    stop = True
+                if rechunk or stop:
+                    break
         self._flush(pending, log_cb)
         return self.history
+
+    def _fire_cut(self, loader, stacked) -> None:
+        """Apply one adaptive cut at the current chunk boundary:
+        extend the plan with a (√α LR cut, ×α batch) phase starting at
+        ``tokens_seen``, validate the new ramp stage is feedable on
+        this topology (fail fast at cut time, not mid-ramp), swap the
+        plan into the engine / checkpoint manager / loader, and kick
+        off a background AOT compile of the next batch size's fused
+        step so the ramp stage starts without a dispatch stall."""
+        st = self.state
+        sch = self.cfg.schedule
+        old_b = self.plan.phases[-1].batch_size
+        new_plan = self.plan.extend_at(
+            st.tokens_seen, seq_len=self.cfg.seq_len,
+            max_batch_size=sch.max_batch_size)
+        new_b = new_plan.phases[-1].batch_size
+        if isinstance(self.mesh, jax.sharding.Mesh):
+            from repro.launch.steps import validate_feeding
+            validate_feeding(new_plan, self.mesh,
+                             start_tokens=st.tokens_seen,
+                             seq_len=self.cfg.seq_len)
+        else:
+            from repro.data.pipeline import validate_per_host_plan
+            validate_per_host_plan(
+                new_plan, getattr(loader, "_pcount", 1) or 1,
+                self.engine.n_data_devices(),
+                start_phase=len(new_plan.phases) - 1)
+        self.plan = new_plan
+        self.engine.update_plan(new_plan)
+        if self._ckpt_manager is not None:
+            self._ckpt_manager.plan = new_plan
+        self.cut_tokens.append(int(st.tokens_seen))
+        if not hasattr(loader, "rechunk"):
+            raise ValueError(
+                "adaptive-seesaw fired a cut but the loader cannot "
+                "re-chunk mid-stream — use PhaseDataLoader (or any "
+                "loader with rechunk(plan, tokens_seen))")
+        loader.rechunk(new_plan, st.tokens_seen)
+        if new_b != old_b:
+            self.engine.prewarm_async(new_b, self.fuse_steps, stacked)

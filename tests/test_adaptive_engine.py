@@ -1,0 +1,287 @@
+"""Adaptive Seesaw on the fused engine: live plan extension
+(``SeesawPlan.extend_at``), the device loss EMA, mid-stream
+re-chunking, the compile-cache invariant under dynamically-created
+phases, and bitwise checkpoint resume between cuts.
+
+The run knobs (window=8, rel_threshold=2e-2, ema_decay=0.9, lr=1e-2)
+are tuned so the tiny MarkovLM run fires three cuts inside ~160 steps
+— a full 4→8→16→32 ramp — keeping every test on the fast tier.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (ModelConfig, OptimizerConfig, RunConfig,
+                           ScheduleConfig)
+from repro.core import seesaw as SS
+from repro.core.adaptive import AdaptiveSeesaw
+from repro.data import MarkovLM, PhaseDataLoader
+from repro.train.trainer import Trainer
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                   n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                   vocab_size=128, max_seq_len=64, rope_theta=1e4)
+
+SEQ, B0, STEPS = 32, 4, 360
+KNOBS = dict(plateau_window=8, plateau_threshold=2e-2, ema_decay=0.9)
+
+
+def _cfg(**kw):
+    return RunConfig(model=TINY,
+                     schedule=ScheduleConfig(kind="adaptive-seesaw",
+                                             base_lr=1e-2,
+                                             warmup_frac=0.02, alpha=2.0,
+                                             n_cuts=4, **KNOBS),
+                     optimizer=OptimizerConfig(kind="adamw"),
+                     seq_len=SEQ, global_batch_size=B0,
+                     total_tokens=SEQ * B0 * STEPS, remat=False,
+                     log_every=1000, **kw)
+
+
+def _run(fuse_steps, max_steps=None):
+    tr = Trainer(_cfg(), fuse_steps=fuse_steps)
+    loader = PhaseDataLoader(MarkovLM(128, seed=0), tr.plan, SEQ)
+    tr.run(loader, max_steps=max_steps)
+    return tr
+
+
+@pytest.fixture(scope="module")
+def fused_run():
+    return _run(fuse_steps=4)
+
+
+# --------------------------------------------------------------------- #
+# plan-level: extend_at and build_plan validation
+# --------------------------------------------------------------------- #
+
+class TestPlanExtension:
+    def _plan(self, b0=4, total=SEQ * B0 * STEPS):
+        return SS.build_plan(kind="adaptive-seesaw", base_lr=1e-2,
+                             total_tokens=float(total), warmup_frac=0.02,
+                             b0=b0, alpha=2.0)
+
+    def test_adaptive_plan_starts_single_phase(self):
+        p = self._plan()
+        assert len(p.phases) == 1
+        assert p.phases[0].batch_size == 4
+        # per-cut factors stay on the Seesaw line: α_s√β = α
+        assert p.alpha == pytest.approx(math.sqrt(2.0))
+        assert p.beta == pytest.approx(2.0)
+
+    def test_extend_appends_seesaw_phase(self):
+        p = self._plan()
+        cut = 80 * B0 * SEQ
+        q = p.extend_at(cut, seq_len=SEQ)
+        assert len(q.phases) == 2
+        assert q.phases[0].end_tokens == float(cut)
+        assert q.phases[1].start_tokens == float(cut)
+        assert q.phases[1].end_tokens == p.total_tokens
+        assert q.phases[1].batch_size == 8          # ×α batch
+        assert q.phases[1].lr_scale == pytest.approx(
+            1.0 / math.sqrt(2.0))                   # ÷√α LR
+        # the original plan is untouched (frozen value semantics)
+        assert len(p.phases) == 1
+
+    def test_extend_chains(self):
+        p = self._plan()
+        q = p.extend_at(80 * B0 * SEQ, seq_len=SEQ)
+        r = q.extend_at(80 * B0 * SEQ + 40 * 8 * SEQ, seq_len=SEQ)
+        assert [ph.batch_size for ph in r.phases] == [4, 8, 16]
+        assert r.phases[2].lr_scale == pytest.approx(0.5)
+
+    def test_extend_off_step_boundary_raises(self):
+        p = self._plan()
+        with pytest.raises(ValueError, match="step boundary"):
+            p.extend_at(80 * B0 * SEQ + 7, seq_len=SEQ)
+
+    def test_extend_outside_last_phase_raises(self):
+        p = self._plan()
+        with pytest.raises(ValueError, match="outside"):
+            p.extend_at(int(p.total_tokens) + B0 * SEQ, seq_len=SEQ)
+        q = p.extend_at(80 * B0 * SEQ, seq_len=SEQ)
+        with pytest.raises(ValueError, match="outside"):
+            # inside an already-closed phase
+            q.extend_at(40 * B0 * SEQ, seq_len=SEQ)
+
+    def test_extend_clamps_to_max_batch(self):
+        p = self._plan()
+        q = p.extend_at(80 * B0 * SEQ, seq_len=SEQ, max_batch_size=6)
+        assert q.phases[1].batch_size == 6
+        # the LR still cuts even when the ramp saturates
+        assert q.phases[1].lr_scale == pytest.approx(
+            1.0 / math.sqrt(2.0))
+
+    # -- build_plan validation (satellite bugfix regression) ------------ #
+    @pytest.mark.parametrize("kind", ["step", "constant", "naive-ramp"])
+    def test_malformed_cuts_raise_for_every_kind(self, kind):
+        """Regression: .validate() used to run only for seesaw kinds,
+        so 'step'/'constant'/'naive-ramp' built silently from cut
+        lists that were out of order or past total_tokens."""
+        kw = dict(kind=kind, base_lr=1.0, total_tokens=1e6,
+                  warmup_frac=0.1, b0=8, alpha=2.0, beta=2.0)
+        with pytest.raises(ValueError, match="increasing"):
+            SS.build_plan(cut_tokens=[5e5, 3e5], **kw)
+        with pytest.raises(ValueError, match="outside"):
+            SS.build_plan(cut_tokens=[3e5, 2e6], **kw)
+        with pytest.raises(ValueError, match="outside"):
+            SS.build_plan(cut_tokens=[5e4], **kw)   # inside warmup
+
+    def test_wellformed_cuts_still_build(self):
+        p = SS.build_plan(kind="step", base_lr=1.0, total_tokens=1e6,
+                          warmup_frac=0.1, b0=8, alpha=2.0,
+                          cut_tokens=[3e5, 6e5])
+        assert len(p.phases) == 3
+
+    def test_steps_per_phase_is_authoritative(self):
+        """Phase.n_steps is a per-phase estimate; the carry-aware
+        steps_per_phase allocation is what the loader/engine run.
+        They agree within one step per phase and exactly in total."""
+        p = SS.build_plan(kind="seesaw", base_lr=1.0, total_tokens=1e6,
+                          warmup_frac=0.1, b0=8, alpha=2.0, n_cuts=3)
+        alloc = p.steps_per_phase(128)
+        for ph, n in zip(p.phases, alloc):
+            assert abs(ph.n_steps(128) - n) <= 1
+        assert sum(alloc) == p.total_steps(128)
+
+
+# --------------------------------------------------------------------- #
+# engine-level: the live adaptive run
+# --------------------------------------------------------------------- #
+
+class TestAdaptiveEngineRun:
+    def test_cuts_fire_and_ramp(self, fused_run):
+        tr = fused_run
+        assert tr.controller.n_cuts >= 2
+        assert [p.batch_size for p in tr.plan.phases] == \
+            [B0 * 2 ** i for i in range(tr.controller.n_cuts + 1)]
+        # every cut landed on a chunk boundary (steps ≡ 0 mod K here:
+        # re-chunking restarts the stream exactly at the cut step)
+        assert all(s % 4 == 0 for s in tr.controller.cut_steps)
+        # cut_tokens are the realized token counts at the cut steps
+        toks = {h["step"]: h["tokens"] for h in tr.history}
+        assert tr.cut_tokens == [toks[s] for s in tr.controller.cut_steps]
+
+    def test_lr_cuts_by_sqrt_alpha_at_cut_steps(self, fused_run):
+        tr = fused_run
+        lr = {h["step"]: h["lr"] for h in tr.history}
+        for i, s in enumerate(tr.controller.cut_steps):
+            assert lr[s + 1] == pytest.approx(
+                lr[s] / math.sqrt(2.0), rel=1e-5)
+
+    def test_one_executable_per_distinct_batch_size(self, fused_run):
+        """The compile-cache invariant survives dynamically-created
+        phases: runtime LR tables mean a cut changes argument values,
+        never programs."""
+        tr = fused_run
+        sizes = {h["batch_size"] for h in tr.history}
+        assert len(tr._step_cache) == len(sizes) >= 3
+        assert {k[0] for k in tr._step_cache} == sizes
+        assert {k[2] for k in tr._step_cache} == {4}   # one chunk K
+
+    def test_fused_matches_eager_cut_for_cut(self, fused_run):
+        """K=1 and K=4 adaptive runs make identical cut decisions and
+        train identically: the EMA recursion is chunking-independent
+        and the plateau test runs at the same window boundaries."""
+        eager = _run(fuse_steps=1)
+        fused = fused_run
+        assert eager.controller.cut_steps == fused.controller.cut_steps
+        assert eager.cut_tokens == fused.cut_tokens
+        for a, b in zip(jax.tree.leaves(eager.state.params),
+                        jax.tree.leaves(fused.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_device_ema_matches_host_recursion(self, fused_run):
+        """The device-accumulated EMA is the exact f32 recursion over
+        the per-step losses, and a host-side controller replaying that
+        recursion at the same chunk boundaries fires cut-for-cut with
+        the live run."""
+        tr = fused_run
+        losses = [np.float32(h["loss"]) for h in tr.history]
+        decay = np.float32(KNOBS["ema_decay"])
+        one = np.float32(1.0)
+        ema = None
+        ema_at = {}
+        for i, l in enumerate(losses):
+            ema = l if ema is None else np.float32(
+                decay * ema + (one - decay) * l)
+            ema_at[i + 1] = ema
+        assert float(ema) == pytest.approx(tr.state.loss_ema, rel=1e-5)
+
+        sch = tr.cfg.schedule
+        ctl = AdaptiveSeesaw(alpha=sch.alpha,
+                             window=sch.plateau_window,
+                             rel_threshold=sch.plateau_threshold,
+                             max_cuts=sch.n_cuts,
+                             min_steps_between=sch.plateau_window)
+        n_steps = len(losses)
+        s = 0
+        while s < n_steps:
+            n = min(4, n_steps - s)
+            s += n
+            ctl.observe_smoothed(float(ema_at[s]), n)
+        assert ctl.cut_steps == tr.controller.cut_steps
+
+
+# --------------------------------------------------------------------- #
+# checkpoint: bitwise resume between cuts
+# --------------------------------------------------------------------- #
+
+class TestAdaptiveCheckpoint:
+    def test_resume_between_cuts_is_bitwise(self, fused_run, tmp_path):
+        """Save between the first and second cut; a fresh trainer
+        rebuilds the extended plan from the manifest's cut tokens,
+        reloads the controller mid-window, re-fires the remaining cuts
+        at identical steps and ends with bitwise-identical params."""
+        ref = fused_run
+        cuts = ref.controller.cut_steps
+        assert len(cuts) >= 2
+        mid = cuts[0] + 4 * ((cuts[1] - cuts[0]) // 8)  # chunk boundary
+        assert cuts[0] < mid < cuts[1]
+
+        part1 = _run(fuse_steps=4, max_steps=mid)
+        assert part1.state.step == mid
+        assert part1.controller.cut_steps == [cuts[0]]
+        path = str(tmp_path / "adaptive-ckpt")
+        part1.save_checkpoint(path)
+
+        tr2 = Trainer(_cfg(), fuse_steps=4)
+        meta = tr2.restore_checkpoint(path)
+        assert meta["step"] == mid
+        assert tr2.controller.cut_steps == [cuts[0]]
+        assert tr2.controller.steps == mid
+        assert [p.batch_size for p in tr2.plan.phases] == [4, 8]
+        assert tr2.state.loss_ema == part1.state.loss_ema
+        loader = PhaseDataLoader(MarkovLM(128, seed=0), tr2.plan, SEQ,
+                                 validate=False)
+        loader.resume(tr2.state.tokens_seen)
+        tr2.run(loader)
+
+        assert tr2.controller.cut_steps == cuts
+        assert tr2.cut_tokens == ref.cut_tokens
+        assert tr2.state.step == ref.state.step
+        for a, b in zip(jax.tree.leaves(ref.state.params),
+                        jax.tree.leaves(tr2.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_prescheduled_checkpoint_rejected(self, tmp_path):
+        """An adaptive trainer cannot resume a checkpoint that carries
+        no controller state — fail with a clear error instead of
+        restarting the controller from scratch mid-run."""
+        cfg = RunConfig(model=TINY,
+                        schedule=ScheduleConfig(kind="seesaw",
+                                                base_lr=1e-3, alpha=2.0,
+                                                n_cuts=2),
+                        optimizer=OptimizerConfig(kind="adamw"),
+                        seq_len=SEQ, global_batch_size=B0,
+                        total_tokens=SEQ * B0 * 40, remat=False)
+        tr = Trainer(cfg)
+        loader = PhaseDataLoader(MarkovLM(128, seed=0), tr.plan, SEQ)
+        tr.run(loader, max_steps=8)
+        path = str(tmp_path / "sched-ckpt")
+        tr.save_checkpoint(path)
+
+        tr2 = Trainer(_cfg(), fuse_steps=4)
+        with pytest.raises(ValueError, match="no adaptive"):
+            tr2.restore_checkpoint(path)

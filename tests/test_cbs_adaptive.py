@@ -84,6 +84,27 @@ class TestAdaptiveSeesaw:
         a_s = math.sqrt(2.0)
         assert a_s * math.sqrt(2.0) == pytest.approx(2.0)
 
+    def test_flat_stream_fires_once_per_plateau(self):
+        """Regression (chain-fire bug): after a cut, the stale
+        ``_prev_window_mean`` kept the pre-cut plateau mean, so every
+        subsequent window on a flat stream re-triggered — one cut per
+        ``window`` steps instead of one per plateau.  A descend-then-
+        plateau stream must fire exactly once per plateau; the second
+        cut needs fresh improvement evidence first."""
+        ctl = AdaptiveSeesaw(alpha=2.0, window=20, min_steps_between=20)
+        # descend to a floor, then sit on it for many windows
+        fired_at = []
+        for i, loss in enumerate(self._loss_stream(400, [0.5])):
+            if ctl.observe(loss):
+                fired_at.append(i)
+        # 400 steps ≈ 20 windows at the plateau: pre-fix this fires a
+        # cut every window (≈ 10+ cuts); fixed it fires exactly once
+        assert ctl.n_cuts == 1, fired_at
+        # a second descend-then-plateau earns exactly one more cut
+        for loss in self._loss_stream(400, [0.25]):
+            ctl.observe(loss)
+        assert ctl.n_cuts == 2
+
     def test_no_cut_while_improving(self):
         ctl = AdaptiveSeesaw(alpha=2.0, window=20, rel_threshold=1e-4)
         lvl = 1.0

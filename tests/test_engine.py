@@ -137,6 +137,17 @@ class TestMicroBatchGeometry:
         assert 12 % micro == 0
         assert (12 // micro) % 4 == 0
 
+    def test_micro_impossible_batch_raises(self):
+        """Regression: global batch 6 on 4 data devices with
+        max_device_batch=2 has NO valid accumulation count (6 is not
+        divisible by 4 at any micro).  The old loop exited at
+        ``micro == batch_size`` and silently returned 6 — a fractional
+        1.5-sequence per-device share.  The engine must raise, naming
+        the geometry."""
+        tr = Trainer(_cfg(), mesh=FakeMesh(data=4), max_device_batch=2)
+        with pytest.raises(ValueError, match=r"6.*4 data devices"):
+            tr._micro(6)
+
     def test_micro_single_device(self):
         tr = Trainer(_cfg(), max_device_batch=2)
         assert tr._micro(8) == 4
