@@ -1,0 +1,320 @@
+"""Serving benchmark: continuous batching vs. static batching, plus a
+Poisson load sweep through the paged engine.
+
+A deterministic load generator (seeded; arrivals are Poisson in the
+engine-step domain, so the trace is identical across hosts regardless
+of wall-clock speed) submits requests with ragged prompt lengths and
+bimodal generation budgets — mostly short replies with a long tail —
+the workload shape where static batching hurts: a batch blocks on its
+longest member while finished rows idle.
+
+Reported:
+
+- a ``throughput`` section comparing the continuous-batching
+  ``ServingEngine`` against the static-batch ``Server`` baseline
+  (requests grouped in arrival order, prompts padded to a shared
+  length, every batch generating its own max budget — the old blocking
+  API's contract) on the SAME mixed-length workload.  ``speedup`` is
+  engine requests/s over static requests/s; the acceptance floor is
+  1.5x.
+- per arrival rate: ``requests_per_s`` / ``tokens_per_s`` drain
+  throughput, ``latency_ms`` p50/p99/mean submit-to-finish wall time
+  (queueing included: at high rate the p99 grows while p50 holds, the
+  continuous-batching signature), and ``mean_occupancy`` decode-slot
+  utilisation.
+- a ``compiles`` section measuring the serving compile invariant:
+  prefill executables <= #prompt-buckets and EXACTLY ONE decode
+  executable, which ``--check-compiles`` turns into a CI gate (the
+  serving counterpart of bench_engine's one-executable-per-batch-size
+  gate).
+
+Warmup touches every prompt bucket once and runs a decode step, then
+``reset()`` keeps the compile cache and frees the pool, so the timed
+region measures steady-state serving, not compilation; the static
+baseline is warmed the same way (one untimed pass).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve \
+        [--requests 48] [--ci] [--check-compiles] \
+        [--check-speedup 1.5] [--out artifacts/bench_serve.json]
+
+Emits one JSON artifact plus the harness's ``name,us_per_call,derived``
+CSV rows via ``run()``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import warnings
+
+import jax
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models import registry as R
+from repro.serving import GenerationRequest, ServingEngine
+from repro.train.serve import Server
+
+# reduced-scale LM, the bench_engine idiom: same serving code path as
+# the real presets, tiny dims so CPU CI finishes in minutes
+SERVE_LM = ModelConfig(name="serve-lm", arch_type="dense", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=2,
+                       head_dim=32, d_ff=256, vocab_size=512,
+                       max_seq_len=256, rope_theta=1e4)
+
+DECODE_SLOTS = 4
+PAGE_SIZE = 16
+MAX_LEN = 128
+RATES = (0.5, 2.0)          # mean arrivals per engine step
+
+
+def _make_engine(params):
+    return ServingEngine(SERVE_LM, params, decode_slots=DECODE_SLOTS,
+                         page_size=PAGE_SIZE, max_len=MAX_LEN)
+
+
+def _request(rng) -> GenerationRequest:
+    """One mixed-workload request: ~3/4 short replies (4..10 tokens),
+    ~1/4 long generations (40..64) — the bimodal shape that makes a
+    static batch block on its slowest member."""
+    if rng.random() < 0.75:
+        max_new = int(rng.integers(4, 11))
+    else:
+        max_new = int(rng.integers(40, 65))
+    s = int(rng.integers(2, MAX_LEN - max_new))
+    prompt = rng.integers(0, SERVE_LM.vocab_size, (s,)).astype(np.int32)
+    return GenerationRequest(prompt=prompt, max_new_tokens=max_new)
+
+
+def _trace(n_requests: int, rate: float, seed: int):
+    """Deterministic Poisson trace: (arrival_step, request) sorted by
+    arrival."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        out.append((t, _request(rng)))
+    return out
+
+
+def _warmup(engine: ServingEngine):
+    """Compile every prompt-bucket prefill and the decode executable,
+    then drop the requests but keep the compile cache."""
+    rng = np.random.default_rng(1)
+    for i, b in enumerate(engine.buckets):
+        s = b if i == 0 else engine.buckets[i - 1] + 1
+        if s + 2 > engine.max_len:
+            s = engine.max_len - 2
+        engine.submit(GenerationRequest(
+            max_new_tokens=2,
+            prompt=rng.integers(0, SERVE_LM.vocab_size, (s,)).astype(
+                np.int32)))
+    engine.drain(max_steps=200)
+    engine.reset()
+
+
+def _drive(engine: ServingEngine, trace) -> dict:
+    """Submit the trace against engine-step time and drain; returns the
+    per-rate metrics block."""
+    t_submit, t_finish, n_tokens = {}, {}, {}
+    step, q = 0, 0
+    t0 = time.perf_counter()
+    while q < len(trace) or not engine.done:
+        while q < len(trace) and trace[q][0] <= step:
+            rid = engine.submit(trace[q][1])
+            t_submit[rid] = time.perf_counter()
+            q += 1
+        for rid, _tok, fin in engine.step():
+            n_tokens[rid] = n_tokens.get(rid, 0) + 1
+            if fin:
+                t_finish[rid] = time.perf_counter()
+        step += 1
+        assert step < 100_000, "engine failed to drain the trace"
+    elapsed = time.perf_counter() - t0
+    lat = np.asarray([1e3 * (t_finish[r] - t_submit[r])
+                      for r in t_finish])
+    total_tokens = sum(n_tokens.values())
+    return {
+        "n_requests": len(trace),
+        "steps": step,
+        "requests_per_s": round(len(trace) / elapsed, 2),
+        "tokens_per_s": round(total_tokens / elapsed, 1),
+        "generated_tokens": total_tokens,
+        "latency_ms": {
+            "p50": round(float(np.percentile(lat, 50)), 1),
+            "p99": round(float(np.percentile(lat, 99)), 1),
+            "mean": round(float(lat.mean()), 1)},
+        "mean_occupancy": round(engine.mean_occupancy(), 3),
+    }
+
+
+def _static_baseline(params, requests, *, timed: bool) -> dict:
+    """The old blocking API on the same workload: requests grouped in
+    arrival order into batches of DECODE_SLOTS, prompts padded to the
+    batch max, each batch generating its own worst-case budget — every
+    request waits for its batch's slowest member."""
+    srv = Server(SERVE_LM, params, max_len=MAX_LEN)
+    t0 = time.perf_counter()
+    useful = 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for i in range(0, len(requests), DECODE_SLOTS):
+            batch = requests[i:i + DECODE_SLOTS]
+            s_max = max(len(r.prompt) for r in batch)
+            toks = np.zeros((len(batch), s_max), np.int32)
+            for j, r in enumerate(batch):
+                # right-align so the last column is each prompt's final
+                # token (the static API's shared-length contract)
+                toks[j, s_max - len(r.prompt):] = r.prompt
+            n_new = max(r.max_new_tokens for r in batch)
+            out = srv.generate(toks, n_new)
+            useful += sum(min(n_new, r.max_new_tokens) for r in batch)
+            del out
+    elapsed = time.perf_counter() - t0
+    if not timed:
+        return {}
+    return {
+        "n_requests": len(requests),
+        "requests_per_s": round(len(requests) / elapsed, 2),
+        "useful_tokens_per_s": round(useful / elapsed, 1),
+        "batch_size": DECODE_SLOTS,
+    }
+
+
+def _measure(n_requests: int = 48, seed: int = 0):
+    rows, result = [], {}
+    params = R.init_params(jax.random.PRNGKey(0), SERVE_LM)
+    engine = _make_engine(params)
+    _warmup(engine)
+    result.update({
+        "model": SERVE_LM.name,
+        "decode_slots": DECODE_SLOTS,
+        "page_size": PAGE_SIZE,
+        "max_len": MAX_LEN,
+        "buckets": list(engine.buckets),
+        "pool_pages": engine.pool.capacity,
+        "rates": {},
+    })
+
+    # throughput comparison on one backlog workload (everything queued
+    # up front): continuous batching vs. the static-batch Server
+    backlog = [r for _, r in _trace(n_requests, 1e9, seed)]
+    engine.reset()
+    eng_rec = _drive(engine, [(0.0, r) for r in backlog])
+    _static_baseline(params, backlog, timed=False)      # warm compile
+    sta_rec = _static_baseline(params, backlog, timed=True)
+    speedup = round(eng_rec["requests_per_s"]
+                    / max(sta_rec["requests_per_s"], 1e-9), 2)
+    result["throughput"] = {
+        "engine": eng_rec, "static": sta_rec, "speedup": speedup}
+    rows.append(("serve/throughput/speedup", float(speedup),
+                 f"engine_rps={eng_rec['requests_per_s']} "
+                 f"static_rps={sta_rec['requests_per_s']} floor=1.5"))
+
+    for rate in RATES:
+        engine.reset()
+        rec = _drive(engine, _trace(n_requests, rate, seed))
+        result["rates"][str(rate)] = rec
+        rows.append((
+            f"serve/rate{rate}/request",
+            1e6 / max(rec["requests_per_s"], 1e-9),
+            f"req_per_s={rec['requests_per_s']} "
+            f"tok_per_s={rec['tokens_per_s']} "
+            f"p50_ms={rec['latency_ms']['p50']} "
+            f"p99_ms={rec['latency_ms']['p99']} "
+            f"occupancy={rec['mean_occupancy']}"))
+    result["compiles"] = {
+        "prefill_executables": engine.n_prefill_executables,
+        "decode_executables": engine.n_decode_executables,
+        "executables": engine.executables,
+        "prompt_buckets": len(engine.buckets),
+        "decode_batch_sizes": 1,
+        "budget": engine.executable_budget,
+    }
+    rows.append(("serve/compiles", float(engine.executables),
+                 f"budget={engine.executable_budget} "
+                 f"buckets={len(engine.buckets)} decode_batches=1"))
+    return rows, result
+
+
+def run(steps: int = 144):
+    """Harness entry point (``python -m benchmarks.run --only serve``):
+    CSV rows only."""
+    rows, _ = _measure(n_requests=16)
+    return rows
+
+
+def check_compiles(result) -> list:
+    """The serving compile invariant as a CI gate: after serving ragged
+    prompts across every bucket at two arrival rates plus the backlog
+    workload, the engine must hold at most one prefill executable per
+    prompt bucket and exactly one decode executable."""
+    errors = []
+    c = result["compiles"]
+    if c["executables"] > c["budget"]:
+        errors.append(
+            f"{c['executables']} executables exceed the budget "
+            f"{c['budget']} (= {c['prompt_buckets']} prompt buckets "
+            f"+ {c['decode_batch_sizes']} decode batch sizes)")
+    if c["prefill_executables"] > c["prompt_buckets"]:
+        errors.append(
+            f"{c['prefill_executables']} prefill executables for "
+            f"{c['prompt_buckets']} prompt buckets — per-prompt-length "
+            f"recompiles are back")
+    if c["decode_executables"] != c["decode_batch_sizes"]:
+        errors.append(
+            f"{c['decode_executables']} decode executables for "
+            f"{c['decode_batch_sizes']} decode batch sizes")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=48,
+                    help="requests per workload (throughput comparison "
+                         "and each arrival-rate sweep point)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ci", action="store_true",
+                    help="reduced request count for the CI smoke")
+    ap.add_argument("--check-compiles", action="store_true",
+                    help="exit non-zero unless prefill executables <= "
+                         "#prompt-buckets and decode executables == 1")
+    ap.add_argument("--check-speedup", type=float, default=None,
+                    help="exit non-zero unless engine/static requests/s "
+                         ">= this floor (wall-clock: not a CI gate)")
+    ap.add_argument("--out", default="artifacts/bench_serve.json")
+    args = ap.parse_args()
+    n = 16 if args.ci else args.requests
+    rows, result = _measure(n_requests=n, seed=args.seed)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"→ {args.out}")
+    ok = True
+    if args.check_compiles:
+        errors = check_compiles(result)
+        for e in errors:
+            print(f"serving compile invariant VIOLATED: {e}")
+        ok = ok and not errors
+        if not errors:
+            print("serving compile invariant OK: one decode executable, "
+                  "prefill executables <= #prompt-buckets")
+    if args.check_speedup is not None:
+        sp = result["throughput"]["speedup"]
+        if sp < args.check_speedup:
+            print(f"continuous-batching speedup {sp}x below the "
+                  f"{args.check_speedup}x floor")
+            ok = False
+        else:
+            print(f"continuous-batching speedup OK: {sp}x >= "
+                  f"{args.check_speedup}x")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ def main() -> None:
     from benchmarks import (bench_engine, bench_figure1, bench_figure2,
                             bench_figure3, bench_figure4_wd,
                             bench_figure5, bench_figure6_zloss,
-                            bench_lemma1, bench_table1)
+                            bench_lemma1, bench_serve, bench_table1)
     suites = {
         "figure1": bench_figure1,
         "table1": bench_table1,
@@ -30,6 +30,7 @@ def main() -> None:
         "figure6": bench_figure6_zloss,
         "lemma1": bench_lemma1,
         "engine": bench_engine,
+        "serve": bench_serve,
     }
     print("name,us_per_call,derived")
     failures = 0

@@ -1,36 +1,58 @@
-"""Batched serving demo: prefill + KV-cache decode through the Server
-runtime, on a reduced config of any assigned architecture.
+"""Serving demo: submit ragged generation requests to the
+continuous-batching ``ServingEngine`` and stream tokens as they land.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch starcoder2-3b
+    PYTHONPATH=src python examples/serve_decode.py --arch llama3.2-3b
+
+Families the engine cannot hold (ring-cache sliding windows, hybrid,
+enc-dec) fall back to the blocking dense ``Server`` — the same typed
+KV-cache API underneath, without continuous batching.
 """
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import registry as R
+from repro.serving import GenerationRequest, ServingEngine
 from repro.train.serve import Server
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.8)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch).reduced()
-    if cfg.arch_type in ("encdec", "audio"):
-        print("note: enc-dec serving needs src embeddings; using the "
-              "prefix stub")
-    params = R.init_params(jax.random.PRNGKey(0), cfg)
-    srv = Server(cfg, params, max_len=args.prompt_len + args.new_tokens
-                 + 8)
+def serve_engine(cfg, params, args):
     rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.new_tokens + 8
+    eng = ServingEngine(cfg, params, decode_slots=args.batch,
+                        max_len=max_len)
+    for i in range(args.batch):
+        s = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        n = int(rng.integers(max(args.new_tokens // 2, 1),
+                             args.new_tokens + 1))
+        prompt = rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32)
+        rid = eng.submit(GenerationRequest(prompt=prompt,
+                                           max_new_tokens=n))
+        print(f"  submit rid={rid} prompt_len={s} max_new={n}")
+    t0 = time.time()
+    n_tok = 0
+    while not eng.done:
+        for rid, tok, fin in eng.step():      # streaming events
+            n_tok += 1
+            if fin:
+                res = eng.result(rid)
+                print(f"  rid={rid} done ({res.finish_reason}): "
+                      f"{res.tokens.tolist()}")
+    dt = time.time() - t0
+    print(f"engine: {n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s),"
+          f" {eng.executables} executables "
+          f"(budget {eng.executable_budget}), "
+          f"occupancy {eng.mean_occupancy():.2f}")
+
+
+def serve_blocking(cfg, params, args):
+    rng = np.random.default_rng(0)
+    srv = Server(cfg, params,
+                 max_len=args.prompt_len + args.new_tokens + 8)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len))
     prefix = None
@@ -39,15 +61,36 @@ def main():
             rng.normal(0, 1, (args.batch, cfg.frontend_tokens,
                               cfg.frontend_dim)), jax.numpy.bfloat16)
     t0 = time.time()
-    out = srv.generate(prompts, args.new_tokens, prefix_emb=prefix,
-                       temperature=args.temperature)
+    with warnings.catch_warnings():           # the known-legacy path
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = srv.generate(prompts, args.new_tokens, prefix_emb=prefix,
+                           temperature=args.temperature)
     dt = time.time() - t0
-    print(f"arch={cfg.name}  batch={args.batch}  "
-          f"prompt={args.prompt_len}  generated={args.new_tokens}")
-    print(f"wall {dt:.2f}s  "
+    print(f"blocking Server: wall {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s batched)")
     for i, row in enumerate(out[:3]):
         print(f"  seq{i}: {row.tolist()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="blocking-Server fallback only; the engine "
+                         "decodes greedily")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    mode = R.serving_mode(cfg)
+    print(f"arch={cfg.name}  serving_mode={mode}")
+    if mode is not None:
+        serve_engine(cfg, params, args)
+    else:
+        serve_blocking(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ import os
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged as _paged
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd as _ssd
@@ -111,6 +112,36 @@ def attention(q, k, v, *, causal: bool = True,
             return jnp.swapaxes(out, 1, 2)
     from repro.models.attention import chunked_attention  # import cycle
     return chunked_attention(q, k, v, causal=causal)
+
+
+def paged_decode_attention(q, k, v, lengths, *, backend: str | None = None,
+                           chunk: int = 4096, block_k: int = 128):
+    """Ragged single-token decode attention over a gathered paged KV
+    window (the serving hot path; see ``repro.serving.cache``).
+
+    q: (B, 1, H, hd) — the new token's query, sitting at per-request
+    absolute position ``lengths[b]``.  k, v: (B, Skv, Hkv, hd) gathered
+    page windows whose slot ``s`` holds absolute position ``s``.  Valid
+    keys for request b are slots 0..lengths[b] inclusive (slot
+    ``lengths[b]`` is the token just written); everything later — page
+    remainders, stale slots from evicted requests, zero padding — sits at
+    positions beyond the causal reach and is masked by the same
+    zero-padding convention as ``attention``, so it contributes exactly
+    zero on every backend.  Returns (B, 1, H, hd)."""
+    backend = resolve(backend)
+    if backend == "xla":
+        # the dense decode path's op, with the scalar offset/length
+        # promoted to per-request arrays — identical arithmetic, so the
+        # paged lookup is bitwise against a dense cache of equal width
+        from repro.models.attention import chunked_attention  # import cycle
+        return chunked_attention(
+            q, k, v, causal=True, q_offset=lengths[:, None],
+            kv_len=(lengths + 1)[:, None, None], chunk=chunk)
+    out = _paged.ragged_decode_attention(
+        jnp.swapaxes(q, 1, 2)[:, :, 0], jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2), lengths, block_k=block_k,
+        interpret=_interp(backend))
+    return out[:, None]
 
 
 def ssd(xh, dt, A, Bm, Cm, D, *, chunk: int = 128,

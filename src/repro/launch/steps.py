@@ -113,7 +113,7 @@ def build_workload(cfg: ModelConfig, shape: InputShape, *,
         def prefill_step(params, batch):
             tokens = batch["tokens"]
             prefix = batch.get("prefix_emb")
-            logits, cache, ln = R.prefill(
+            logits, _cache = R.prefill(
                 params, cfg, tokens, prefix_emb=prefix,
                 cache_len_cap=shape.seq_len, dtype=dtype,
                 multi_pod=multi_pod)
@@ -125,16 +125,15 @@ def build_workload(cfg: ModelConfig, shape: InputShape, *,
         out_specs = P(b[0], None, "model")
         return prefill_step, args, in_specs, out_specs
 
-    # decode
-    def serve_step(params, cache, cache_len, token):
-        logits, new_cache, new_len = R.decode_step(
-            params, cfg, cache, cache_len, token, dtype=dtype,
-            multi_pod=multi_pod)
-        return logits, new_cache, new_len
+    # decode: the cache is a typed KVCache pytree carrying its own
+    # per-request lengths (no scalar cache_len operand anymore)
+    def serve_step(params, cache, token):
+        logits, new_cache = R.decode_step(
+            params, cfg, cache, token, dtype=dtype, multi_pod=multi_pod)
+        return logits, new_cache
 
-    args = (pstruct, istruct["cache"], istruct["cache_len"],
-            istruct["token"])
-    in_specs = (pspec, ispec["cache"], ispec["cache_len"], ispec["token"])
+    args = (pstruct, istruct["cache"], istruct["token"])
+    in_specs = (pspec, ispec["cache"], ispec["token"])
     b = ispec["token"]
-    out_specs = (P(b[0], None, "model"), ispec["cache"], P())
+    out_specs = (P(b[0], None, "model"), ispec["cache"])
     return serve_step, args, in_specs, out_specs

@@ -274,20 +274,46 @@ def decode_attn(params: Params, x, cache: Params, cache_len, *,
                 chunk: int = 4096):
     """One-token decode: x (B, 1, d); cache holds ``cache_len`` valid
     entries (full cache) or is a ring buffer with a ``pos`` array.
-    Returns (out (B,1,d), new_cache)."""
+
+    ``cache_len`` may be a scalar (all rows at the same depth — the
+    training/eval decode path) or a (B,) int32 array of per-request
+    depths (the serving path: one fixed-shape executable steps requests
+    at ragged positions).  The ragged form supports the full cache only;
+    ring caches share one ``pos`` array across the batch, so their
+    depths cannot diverge.  Returns (out (B,1,d), new_cache)."""
     B = x.shape[0]
-    pos = cache_len                                       # scalar int32
+    pos = cache_len                             # scalar or (B,) int32
+    ragged = jnp.ndim(pos) == 1
     q = (x @ params["w_q"].astype(x.dtype)).reshape(B, 1, n_heads, head_dim)
     k = (x @ params["w_k"].astype(x.dtype)).reshape(B, 1, n_kv_heads,
                                                     head_dim)
     v = (x @ params["w_v"].astype(x.dtype)).reshape(B, 1, n_kv_heads,
                                                     head_dim)
     if rope_theta:
-        ppos = jnp.full((B, 1), pos)
+        ppos = pos[:, None] if ragged else jnp.full((B, 1), pos)
         q = apply_rope(q, ppos, rope_theta)
         k = apply_rope(k, ppos, rope_theta)
 
     ring = "pos" in cache
+    if ragged:
+        if ring:
+            raise ValueError(
+                "per-request cache_len needs a full cache; ring caches "
+                "share one position array across the batch")
+        # scatter row b's token at its own depth, then mask per request:
+        # the same promoted q_offset/kv_len arithmetic as the paged
+        # backend, so dense-vs-paged decode is bitwise at equal width
+        new_cache = {
+            "k": cache["k"].at[jnp.arange(B), pos].set(
+                k[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[jnp.arange(B), pos].set(
+                v[:, 0].astype(cache["v"].dtype))}
+        o = chunked_attention(q, new_cache["k"].astype(q.dtype),
+                              new_cache["v"].astype(q.dtype), causal=True,
+                              window=window, q_offset=pos[:, None],
+                              kv_len=(pos + 1)[:, None, None], chunk=chunk)
+        o = o.reshape(B, 1, n_heads * head_dim)
+        return o @ params["w_o"].astype(x.dtype), new_cache
     if ring:
         W = cache["k"].shape[1]
         slot = jnp.mod(pos, W)

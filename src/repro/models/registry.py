@@ -85,13 +85,83 @@ def forward_hidden(params, cfg: ModelConfig, tokens, **kw):
     return family(cfg).forward_hidden(params, cfg, tokens, **kw)
 
 
+def _sc():
+    # function-level import: repro.serving.__init__ pulls in the engine,
+    # which imports this module — a top-level import would cycle
+    from repro.serving import cache as sc
+    return sc
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when the family can serve from the paged KV pool: the
+    transformer families with full attention.  Sliding-window archs keep
+    a ring cache whose shared ``pos`` array cannot diverge per request,
+    and the recurrent families hold state, not KV."""
+    return (_FAMILY_MODULE[cfg.arch_type] == "repro.models.transformer"
+            and cfg.sliding_window is None)
+
+
+def serving_mode(cfg: ModelConfig):
+    """How the continuous-batching engine can hold this family's cache:
+    ``"paged"`` (token-granular page tables), ``"state"`` (fixed-size
+    recurrent state, one page per request), or ``None`` (dense
+    ``Server`` only: ring-cache windows share one position array and
+    enc-dec needs per-request source embeddings)."""
+    if supports_paged(cfg):
+        return "paged"
+    if cfg.arch_type == "ssm":
+        return "state"
+    return None
+
+
 def prefill(params, cfg: ModelConfig, tokens, **kw):
-    return family(cfg).prefill(params, cfg, tokens, **kw)
+    """Run the prompt and build the decode cache.  Returns
+    (logits (B, 1, V), ``serving.DenseKVCache``) — the cache carries its
+    own (B,) ``lengths``, so callers no longer thread a scalar
+    ``cache_len`` alongside the cache pytree."""
+    logits, data, ln = family(cfg).prefill(params, cfg, tokens, **kw)
+    B = tokens.shape[0]
+    lengths = jnp.full((B,), ln, jnp.int32)
+    return logits, _sc().DenseKVCache(data=data, lengths=lengths)
 
 
-def decode_step(params, cfg: ModelConfig, cache, cache_len, token, **kw):
-    return family(cfg).decode_step(params, cfg, cache, cache_len, token,
-                                   **kw)
+def prefill_ragged(params, cfg: ModelConfig, tokens, lengths, **kw):
+    """Bucketed prefill (full-attention transformer families only):
+    tokens right-padded to a shared bucket length, ``lengths`` (B,) the
+    true prompt lengths.  Returns (logits at each request's last real
+    token, raw per-layer k, v (L, B, S, Hkv, hd)) for the cache layer
+    (dense assembly or page-pool scatter) to place."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"ragged prefill needs full attention; {cfg.arch_type} with "
+            f"window={cfg.sliding_window} keeps the exact-length path")
+    return family(cfg).prefill_ragged(params, cfg, tokens, lengths, **kw)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, **kw):
+    """One decode step against a typed KV cache.  ``cache`` is either a
+    ``serving.DenseKVCache`` (contiguous per-family cache pytree) or a
+    ``serving.PagedKVCache`` (page pool + per-request tables); dispatch
+    is on the cache type, so one call site serves both layouts.
+    Returns (logits (B, 1, V), new cache of the same type).
+
+    Dense full-attention caches step at per-request depths (the ragged
+    ``lengths`` array is passed straight to the family); uniform-layout
+    caches (ring windows, recurrent state, enc-dec) require all rows at
+    one depth and use ``lengths[0]``."""
+    sc = _sc()
+    if isinstance(cache, sc.PagedKVCache):
+        return sc.paged_decode(params, cfg, cache, token, **kw)
+    if not isinstance(cache, sc.DenseKVCache):
+        raise TypeError(
+            f"decode_step expects a DenseKVCache or PagedKVCache, got "
+            f"{type(cache).__name__}; build one with registry.prefill "
+            f"or serving.cache helpers")
+    cl = cache.lengths if supports_paged(cfg) else cache.lengths[0]
+    logits, data, _ = family(cfg).decode_step(params, cfg, cache.data,
+                                              cl, token, **kw)
+    return logits, sc.DenseKVCache(data=data,
+                                   lengths=cache.lengths + 1)
 
 
 def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
@@ -145,11 +215,12 @@ def decode_struct(cfg: ModelConfig, batch: int, seq_len: int,
                   dtype=jnp.bfloat16):
     # eval_shape: a 512-chip decode cache is hundreds of GB — it must
     # never be allocated on the dry-run host
-    cache = jax.eval_shape(
+    data = jax.eval_shape(
         lambda: cache_struct(cfg, batch, seq_len, dtype))
+    cache = _sc().DenseKVCache(
+        data=data, lengths=jax.ShapeDtypeStruct((batch,), jnp.int32))
     return {
         "cache": cache,
-        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
         "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
     }
 
@@ -225,8 +296,7 @@ def input_shardings(cfg: ModelConfig, shape: InputShape,
                            seq_shard=cache_seq_shard)
 
     cache_spec = jax.tree.map(spec_of, struct["cache"])
-    return {"cache": cache_spec, "cache_len": P(),
-            "token": P(b, None)}
+    return {"cache": cache_spec, "token": P(b, None)}
 
 
 # --------------------------------------------------------------------- #
@@ -257,7 +327,7 @@ def concrete_inputs(cfg: ModelConfig, mode: str, batch: int, seq_len: int,
                 rng.normal(0, 1, (batch, cfg.frontend_tokens,
                                   cfg.frontend_dim)), jnp.bfloat16)
         return out
-    cache = cache_struct(cfg, batch, seq_len)
-    return {"cache": cache,
-            "cache_len": jnp.asarray(seq_len // 2, jnp.int32),
-            "token": jnp.asarray(toks[:, :1])}
+    data = cache_struct(cfg, batch, seq_len)
+    cache = _sc().DenseKVCache(
+        data=data, lengths=jnp.full((batch,), seq_len // 2, jnp.int32))
+    return {"cache": cache, "token": jnp.asarray(toks[:, :1])}

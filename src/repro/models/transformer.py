@@ -249,6 +249,59 @@ def prefill(params: Params, cfg: ModelConfig, tokens, *, prefix_emb=None,
     return logits, cache, jnp.asarray(S, jnp.int32)
 
 
+def prefill_ragged(params: Params, cfg: ModelConfig, tokens, lengths, *,
+                   prefix_emb=None, dtype=jnp.bfloat16,
+                   multi_pod: bool = False, attn_chunk: int = 1024,
+                   seq_shard: bool = True):
+    """Bucketed prefill: tokens (B, S_bucket) right-padded to a shared
+    bucket length, lengths (B,) true lengths (frontend prefix included).
+    Causality makes every real position independent of the padding rows,
+    so one executable serves every prompt length in the bucket.
+
+    Returns (logits (B, 1, V) at each request's last real token,
+    k, v (L, B, S, Hkv, hd)) — the raw per-layer K/V, unpadded; rows at
+    positions >= lengths[b] hold padding-token junk the cache layer must
+    mask (the dense cache masks by ``kv_len``, the page pool by the
+    causal reach)."""
+    if cfg.sliding_window is not None:
+        raise NotImplementedError(
+            "ragged bucketed prefill supports full attention only; "
+            "sliding-window (ring-cache) archs keep the exact-length "
+            "prefill path")
+    batch_spec = fsdp_axis(multi_pod)
+    emb = params["embed"]["tok"].astype(dtype)
+    x = emb[tokens]
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(dtype), x], axis=1)
+    B, S, d = x.shape
+    res_spec = (residual_spec(batch_spec, S) if seq_shard
+                else P(batch_spec, None, None))
+    x = constrain(x, res_spec)
+
+    def body(x, pl):
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        a, (k, v) = A.attn_forward(
+            pl["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True,
+            window=None, chunk=attn_chunk)
+        x = x + a
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        if cfg.arch_type == "moe":
+            f, _ = M.moe_forward(pl["moe"], h, cfg, batch_axes=batch_spec)
+        else:
+            f = mlp(pl["mlp"], h, cfg.act)
+        x = constrain(x + f, res_spec)
+        return x, (k, v)
+
+    x, (k, v) = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    idx = jnp.clip(lengths - 1, 0, S - 1)[:, None, None]
+    h_last = jnp.take_along_axis(x, jnp.broadcast_to(idx, (B, 1, d)),
+                                 axis=1)
+    logits = logits_from_hidden(params, cfg, h_last)
+    return logits, k, v
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache: Params, cache_len,
                 token, *, dtype=jnp.bfloat16, multi_pod: bool = False,
                 attn_chunk: int = 4096):

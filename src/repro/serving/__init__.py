@@ -1,0 +1,20 @@
+"""Serving subsystem: typed KV caches, the paged pool, and the
+continuous-batching engine.
+
+``serving.cache`` owns the cache layouts (the ``KVCache`` protocol with
+its dense and paged implementations, the page pool and its device
+plumbing); ``serving.engine`` owns the request lifecycle
+(``GenerationRequest`` -> submit/step/drain -> ``GenerationResult``).
+The dense blocking ``Server`` in ``train.serve`` remains as the oracle
+and the fallback for families without a paged/state serving mode.
+"""
+from repro.serving.cache import (NULL_PAGE, DenseKVCache, KVCache,
+                                 OutOfPages, PagedKVCache, PagePool)
+from repro.serving.engine import (GenerationRequest, GenerationResult,
+                                  ServingEngine, pow2_buckets)
+
+__all__ = [
+    "KVCache", "DenseKVCache", "PagedKVCache", "PagePool", "OutOfPages",
+    "NULL_PAGE", "ServingEngine", "GenerationRequest", "GenerationResult",
+    "pow2_buckets",
+]

@@ -1,0 +1,387 @@
+"""Typed KV caches for serving: one protocol, two layouts.
+
+``KVCache`` is the contract ``registry.prefill`` / ``registry.decode_step``
+speak: a pytree that carries its own per-request ``lengths`` (B,) int32,
+so callers never thread a scalar ``cache_len`` beside the cache again.
+
+``DenseKVCache`` wraps the contiguous per-family cache pytree the models
+have always built (transformer K/V, ring buffers, recurrent state,
+enc-dec cross K/V) — the training/eval layout, one row per request.
+
+``PagedKVCache`` is the serving layout: requests own fixed-size pages of
+a preallocated pool and carry per-request page tables, so admission,
+eviction, and ragged depths never retrigger compilation.  It serves two
+families of state:
+
+- ``kind="attn"`` — the fused head-interleaved KV pool of the
+  tpu_commons/sglang-jax lineage, one buffer per model:
+
+      kv: (L, n_pages, page_size, 2 * n_kv_heads, head_dim)
+
+  where head h's K lives at interleaved index 2h and its V at 2h + 1 —
+  ``[K0, V0, K1, V1, ...]`` — so a page gather lands K and V for a head
+  adjacent in memory and one lookup feeds both operands of attention.
+
+- ``kind="state"`` — recurrent families (SSM) hold O(1) state, so each
+  request is exactly one page (``page_size == 1``) of a state pool whose
+  leaves put the page id on axis 1: ``(L, n_pages, ...)``.  The same
+  admission/eviction machinery serves both kinds.
+
+Page id 0 is the NULL page: the allocator never hands it out, and every
+write addressed by an inactive decode slot (or a masked prefill row) is
+routed there, so inactive lanes run the same executable as active ones
+without a scatter-guard.  Stale data in the null page — or in any reused
+page beyond a request's length — is unreachable: the ragged attention
+masks every position beyond the causal reach
+(``kernels.backend.paged_decode_attention``).
+
+Host-side bookkeeping is ``PagePool``: a free list, alloc/free, and a
+``defrag`` that compacts live pages to the low ids with a single device
+gather (permutation) and rewrites the page tables in place.  Device-side
+plumbing is pure-functional and jit-composable: ``scatter_prefill``
+writes a prompt's K/V into its pages, ``paged_decode`` runs one decode
+step against a ``PagedKVCache`` — the serving counterpart of the dense
+``decode_step``, with the scalar cache length promoted to per-request
+``lengths`` so one executable serves slots at ragged depths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro.configs.base import ModelConfig
+from repro.kernels import backend as KB
+from repro.models import moe as M
+from repro.models.layers import apply_rope, mlp, rmsnorm
+from repro.models.transformer import logits_from_hidden
+
+Params = Dict[str, Any]
+
+NULL_PAGE = 0
+
+
+class OutOfPages(RuntimeError):
+    """The pool has no free page for a required allocation."""
+
+
+# --------------------------------------------------------------------- #
+# the cache protocol and its two implementations
+# --------------------------------------------------------------------- #
+
+@runtime_checkable
+class KVCache(Protocol):
+    """What ``registry.decode_step`` needs from a cache: per-request
+    valid lengths.  Both implementations are registered pytrees, so they
+    pass through jit/eval_shape/tree.map untouched."""
+
+    lengths: jax.Array          # (B,) int32 — tokens cached per request
+
+
+@dataclasses.dataclass
+class DenseKVCache:
+    """The contiguous per-family cache: ``data`` is whatever pytree the
+    family's ``prefill`` builds (row b of every leaf belongs to request
+    b).  Full-attention transformer caches step at per-request depths;
+    uniform layouts (ring windows, recurrent state, enc-dec) keep all
+    rows at ``lengths[0]``."""
+
+    data: Any
+    lengths: jax.Array
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """The pooled serving cache.  ``kv`` is the shared pool buffer (the
+    fused attn array, or the state pytree for ``kind="state"``);
+    ``pages`` (B, P) int32 are per-request page tables (unused slots
+    hold ``NULL_PAGE``); ``page_size``/``kind`` are static so they key
+    the executable, not feed it."""
+
+    kv: Any
+    pages: jax.Array
+    lengths: jax.Array
+    page_size: int = 16
+    kind: str = "attn"
+
+
+jtu.register_dataclass(DenseKVCache, data_fields=["data", "lengths"],
+                       meta_fields=[])
+jtu.register_dataclass(PagedKVCache,
+                       data_fields=["kv", "pages", "lengths"],
+                       meta_fields=["page_size", "kind"])
+
+
+# --------------------------------------------------------------------- #
+# host-side page allocator
+# --------------------------------------------------------------------- #
+
+class PagePool:
+    """Preallocated paged pool + host-side page allocator.
+
+    ``capacity`` usable pages (page 0 is reserved as the null page).
+    The device buffer ``kv`` is replaced functionally by the jitted
+    scatter/decode executables; the host side only tracks which page ids
+    are free."""
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
+                 dtype=jnp.bfloat16, kind: str = "attn"):
+        if n_pages < 2:
+            raise ValueError("PagePool needs >= 2 pages (page 0 is the "
+                             "reserved null page)")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if kind not in ("attn", "state"):
+            raise ValueError(f"unknown pool kind {kind!r}")
+        if kind == "state" and page_size != 1:
+            raise ValueError("state pools hold one fixed-size state per "
+                             "page; page_size must be 1")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.dtype = dtype
+        self.kind = kind
+        self.kv = self._fresh_buffer()
+        # LIFO free list: freshly freed (hot) pages are reused first
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    def _fresh_buffer(self):
+        if self.kind == "attn":
+            return jnp.zeros(
+                (self.cfg.n_layers, self.n_pages, self.page_size,
+                 2 * self.cfg.n_kv_heads, self.cfg.head_dim), self.dtype)
+        from repro.models import registry as R  # deferred: import cycle
+        # state leaves carry the page id on axis 1: (L, n_pages, ...)
+        return R.cache_struct(self.cfg, self.n_pages, 1, self.dtype)
+
+    def cache(self, pages, lengths) -> PagedKVCache:
+        """View the pool + a batch's tables/lengths as a PagedKVCache."""
+        return PagedKVCache(kv=self.kv, pages=pages, lengths=lengths,
+                            page_size=self.page_size, kind=self.kind)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.capacity - self.n_free
+
+    def occupancy(self) -> float:
+        return self.n_used / self.capacity
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(-(-n_tokens // self.page_size), 1)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(
+                f"need {n} pages, {len(self._free)} free "
+                f"(capacity {self.capacity})")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"free of invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(pages)
+
+    def reset(self) -> None:
+        """Free everything and zero the buffer (fresh pool, same
+        executables — shapes are unchanged)."""
+        self.kv = self._fresh_buffer()
+        self._free = list(range(self.n_pages - 1, 0, -1))
+
+    def defrag(self, tables: Sequence[List[int]]) -> None:
+        """Compact every live page to the lowest ids: one device gather
+        permutes the pool, and each table in ``tables`` (mutable lists of
+        page ids, e.g. the engine's per-slot lists) is rewritten in
+        place.  Pages not covered by any table are treated as free."""
+        live = [p for table in tables for p in table]
+        if len(set(live)) != len(live):
+            raise ValueError("defrag: a page id appears in two tables")
+        remap = {old: new for new, old in enumerate(live, start=1)}
+        src = list(range(self.n_pages))          # new id -> old id
+        for old, new in remap.items():
+            src[new] = old
+        perm = jnp.asarray(src, jnp.int32)
+        self.kv = jax.tree.map(lambda a: jnp.take(a, perm, axis=1),
+                               self.kv)
+        for table in tables:
+            table[:] = [remap[p] for p in table]
+        self._free = list(range(self.n_pages - 1, len(live), -1))
+
+
+# --------------------------------------------------------------------- #
+# device-side layout plumbing (pure, jit-composable)
+# --------------------------------------------------------------------- #
+
+def kv_interleave(k, v):
+    """k, v: (..., Hkv, hd) -> (..., 2*Hkv, hd) as [K0, V0, K1, V1, ...]."""
+    Hkv, hd = k.shape[-2], k.shape[-1]
+    return jnp.stack([k, v], axis=-2).reshape(*k.shape[:-2], 2 * Hkv, hd)
+
+
+def kv_deinterleave(kv):
+    """(..., 2*Hkv, hd) -> (k, v) each (..., Hkv, hd)."""
+    return kv[..., 0::2, :], kv[..., 1::2, :]
+
+
+def gather_pages(pool_layer, pages, *, page_size: int):
+    """pool_layer: (n_pages, page_size, 2*Hkv, hd); pages: (B, P) int32.
+    Returns (k, v) each (B, P * page_size, Hkv, hd) — slot s holds
+    absolute position s of its request (junk beyond the request's length
+    is masked downstream by the causal reach)."""
+    B, P = pages.shape
+    kv = pool_layer[pages]                       # (B, P, ps, 2Hkv, hd)
+    kv = kv.reshape(B, P * page_size, *kv.shape[3:])
+    return kv_deinterleave(kv)
+
+
+def scatter_prefill(pool_kv, k, v, pages, lengths, *, page_size: int):
+    """Write prompt K/V into the pool.  pool_kv: (L, n_pages, ps, 2Hkv,
+    hd); k, v: (L, B, S, Hkv, hd) from ``prefill_ragged``; pages: (B, P)
+    page-table rows (P * ps >= S); lengths: (B,) true prompt lengths —
+    rows at positions >= lengths[b] (bucket padding) go to the null
+    page."""
+    L, B, S, Hkv, hd = k.shape
+    t = jnp.arange(S)
+    page_of_t = jnp.where(t[None, :] < lengths[:, None],
+                          pages[:, t // page_size], NULL_PAGE)   # (B, S)
+    offs = jnp.broadcast_to((t % page_size)[None, :], (B, S))
+    kv = kv_interleave(k, v).astype(
+        jax.tree.leaves(pool_kv)[0].dtype)       # (L, B, S, 2Hkv, hd)
+    return pool_kv.at[:, page_of_t, offs].set(kv)
+
+
+def scatter_state(pool_kv, state, rows):
+    """Write per-request recurrent state into its pool rows.  pool_kv
+    leaves: (L, n_pages, ...); state leaves: (L, B, ...); rows: (B,)
+    page ids (one page per request for ``kind="state"``)."""
+    return jax.tree.map(
+        lambda p, s: p.at[:, rows].set(s.astype(p.dtype)), pool_kv, state)
+
+
+def gather_state(pool_kv, rows):
+    """Per-request state rows out of the pool: inverse of
+    ``scatter_state`` (leaves (L, n_pages, ...) -> (L, B, ...))."""
+    return jax.tree.map(lambda p: p[:, rows], pool_kv)
+
+
+# --------------------------------------------------------------------- #
+# paged decode forward
+# --------------------------------------------------------------------- #
+
+def paged_decode_attn(params: Params, x, pool_layer, pages, lengths, *,
+                      page_size: int, n_heads: int, n_kv_heads: int,
+                      head_dim: int, rope_theta: float,
+                      backend: str = "xla", chunk: int = 4096):
+    """One layer of paged decode attention.  x: (B, 1, d); pool_layer:
+    (n_pages, ps, 2Hkv, hd); pages: (B, P); lengths: (B,) tokens already
+    cached per slot (= the new token's absolute position).  Inactive
+    slots carry all-null page-table rows, so their writes land in the
+    null page and their (garbage) outputs are discarded by the host.
+    Returns (out (B, 1, d), new_pool_layer)."""
+    B = x.shape[0]
+    q = (x @ params["w_q"].astype(x.dtype)).reshape(B, 1, n_heads,
+                                                    head_dim)
+    k = (x @ params["w_k"].astype(x.dtype)).reshape(B, 1, n_kv_heads,
+                                                    head_dim)
+    v = (x @ params["w_v"].astype(x.dtype)).reshape(B, 1, n_kv_heads,
+                                                    head_dim)
+    if rope_theta:
+        ppos = lengths[:, None]                      # (B, 1) per-request
+        q = apply_rope(q, ppos, rope_theta)
+        k = apply_rope(k, ppos, rope_theta)
+
+    # scatter the new token: position `lengths[b]` lives in page
+    # lengths[b] // ps at offset lengths[b] % ps of that slot's table
+    kv_tok = kv_interleave(k[:, 0], v[:, 0]).astype(pool_layer.dtype)
+    page = jnp.take_along_axis(pages, (lengths // page_size)[:, None],
+                               axis=1)[:, 0]         # (B,)
+    off = lengths % page_size
+    new_pool = pool_layer.at[page, off].set(kv_tok)
+
+    kk, vv = gather_pages(new_pool, pages, page_size=page_size)
+    o = KB.paged_decode_attention(q, kk.astype(q.dtype),
+                                  vv.astype(q.dtype), lengths,
+                                  backend=backend, chunk=chunk)
+    o = o.reshape(B, 1, n_heads * head_dim)
+    return o @ params["w_o"].astype(x.dtype), new_pool
+
+
+def _paged_attn_decode(params: Params, cfg: ModelConfig,
+                       cache: PagedKVCache, token, *,
+                       dtype=jnp.bfloat16, attn_chunk: int = 4096):
+    """One decode step over the attention page pool — the paged
+    counterpart of ``transformer.decode_step`` with per-request lengths.
+    token: (B, 1) int32.  Returns (logits (B, 1, V), new cache)."""
+    pages, lengths = cache.pages, cache.lengths
+    emb = params["embed"]["tok"].astype(dtype)
+    x = emb[token]
+
+    def body(x, xs):
+        pl, pool_layer = xs
+        h = rmsnorm(x, pl["norm1"], cfg.norm_eps)
+        a, new_pool = paged_decode_attn(
+            pl["attn"], h, pool_layer, pages, lengths,
+            page_size=cache.page_size, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, backend=cfg.kernel_backend,
+            chunk=attn_chunk)
+        x = x + a
+        h = rmsnorm(x, pl["norm2"], cfg.norm_eps)
+        if cfg.arch_type == "moe":
+            f, _ = M.moe_forward(pl["moe"], h, cfg)
+        else:
+            f = mlp(pl["mlp"], h, cfg.act)
+        return x + f, new_pool
+
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], cache.kv))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)
+    new_cache = dataclasses.replace(cache, kv=new_kv,
+                                    lengths=lengths + 1)
+    return logits, new_cache
+
+
+def _paged_state_decode(params: Params, cfg: ModelConfig,
+                        cache: PagedKVCache, token, *,
+                        dtype=jnp.bfloat16, **kw):
+    """One decode step for a recurrent family served from a state pool:
+    gather each request's state row, run the family's position-free
+    decode, scatter back.  Inactive slots point at the null row, whose
+    garbage is never read by a live request (duplicate null writes
+    last-write-win into row 0, which nobody owns)."""
+    from repro.models import registry as R  # deferred: import cycle
+    rows = cache.pages[:, 0]
+    state = gather_state(cache.kv, rows)
+    # recurrent decode ignores absolute position (the state IS the
+    # history), so a shared scalar 0 is exact at ragged depths
+    logits, new_state, _ = R.family(cfg).decode_step(
+        params, cfg, state, jnp.int32(0), token, dtype=dtype, **kw)
+    new_kv = scatter_state(cache.kv, new_state, rows)
+    new_cache = dataclasses.replace(cache, kv=new_kv,
+                                    lengths=cache.lengths + 1)
+    return logits, new_cache
+
+
+def paged_decode(params: Params, cfg: ModelConfig, cache: PagedKVCache,
+                 token, *, dtype=jnp.bfloat16, attn_chunk: int = 4096,
+                 **kw):
+    """``registry.decode_step``'s paged branch: dispatch on the pool
+    kind.  Returns (logits (B, 1, V), new PagedKVCache)."""
+    if cache.kind == "attn":
+        return _paged_attn_decode(params, cfg, cache, token, dtype=dtype,
+                                  attn_chunk=attn_chunk)
+    return _paged_state_decode(params, cfg, cache, token, dtype=dtype,
+                               **kw)

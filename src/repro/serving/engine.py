@@ -1,0 +1,477 @@
+"""Continuous-batching serving engine over the paged KV pool.
+
+The trainer's discipline — one executable per distinct batch shape,
+exact token accounting — applied to serving under dynamic arrival:
+
+- **Request-oriented API.**  Callers ``submit()`` a ``GenerationRequest``
+  and either pump ``step()`` themselves (streaming: each step returns
+  (rid, token, finished) events the moment they are sampled) or call
+  ``drain()`` for the finished ``GenerationResult``s.  ``generate()`` is
+  the synchronous compatibility wrapper matching the old blocking
+  ``Server.generate`` signature.
+
+- **Separate prefill and decode executables.**  Prefill runs one request
+  at a time through the bucketed ragged prefill (prompts right-padded to
+  a small ladder of bucket lengths), fused with the page scatter and
+  greedy first-token sample into one executable per bucket.  Decode runs
+  every slot — active or not — through ONE fixed-shape executable (the
+  engine uses a single fixed slot count).  The compile-cache invariant
+  is therefore ``executables <= #prompt-buckets + 1``, asserted by tests
+  and by ``bench_serve --check-compiles``.
+
+- **Admit/evict at every decode step.**  Pending requests are admitted
+  into free slots whenever the pool can cover their worst-case page
+  demand (a conservative reservation: admitted requests can never
+  deadlock mid-decode); finished requests (EOS or max-tokens) are
+  evicted and their pages freed the step they finish.  Pages are
+  allocated lazily — a slot grows its page list only when its length
+  crosses a page boundary — so eviction returns exactly what admission
+  + growth took.
+
+- **Greedy decoding**, pinned bitwise against the dense ``Server``
+  oracle: one solo dense run per request must produce the same token
+  ids the engine produced under any admit/evict interleaving (see
+  tests/test_serving.py).
+
+Both cache layouts of ``serving.cache`` are served: full-attention
+transformer families run token-granular page tables
+(``serving_mode == "paged"``); recurrent families (SSM) hold one
+fixed-size state page per request (``serving_mode == "state"``) behind
+the same admission/eviction machinery — their prefill is exact-length
+(padding would pollute the recurrent state), so the compile budget there
+is one executable per distinct prompt length instead of per bucket.
+
+Inactive slots run the same executable with an all-null page-table row:
+their writes land in the null page, their outputs are discarded, and —
+proven by the oracle tests — they cannot leak into live requests.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as R
+from repro.serving import cache as SC
+
+
+def pow2_buckets(max_prompt_len: int, min_bucket: int = 16) -> Tuple[int, ...]:
+    """Power-of-two bucket ladder covering 1..max_prompt_len."""
+    out, b = [], min_bucket
+    while b < max_prompt_len:
+        out.append(b)
+        b *= 2
+    out.append(max(max_prompt_len, min_bucket))
+    return tuple(dict.fromkeys(out))
+
+
+@dataclass
+class GenerationRequest:
+    """One generation job.  ``rid`` is assigned by ``submit()`` when
+    omitted; pass one explicitly to correlate with an external queue."""
+
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    rid: Optional[int] = None
+
+
+@dataclass
+class GenerationResult:
+    """A finished request: generated ids, the reason decoding stopped
+    (``"eos"`` or ``"length"``), and — when the engine was built with a
+    ``detokenizer`` — the decoded text."""
+
+    rid: int
+    tokens: np.ndarray                  # (n,) int32 generated ids
+    finish_reason: str
+    prompt_len: int
+    text: Optional[str] = None
+
+
+@dataclass
+class _Slot:
+    req: GenerationRequest
+    length: int                         # tokens currently in the cache
+    pages: List[int]
+    total_pages: int                    # worst-case demand (reservation)
+    out: List[int] = field(default_factory=list)
+    last_token: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, decode_slots: int = 4,
+                 page_size: int = 16, max_len: int = 256,
+                 n_pages: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 dtype=jnp.bfloat16, prefill_chunk: int = 1024,
+                 decode_chunk: int = 4096,
+                 detokenizer: Optional[Callable[[Sequence[int]], str]]
+                 = None):
+        self.mode = R.serving_mode(cfg)
+        if self.mode is None:
+            raise NotImplementedError(
+                f"continuous batching needs a paged or single-page cache; "
+                f"arch_type={cfg.arch_type!r} with sliding_window="
+                f"{cfg.sliding_window} serves via the dense train.serve."
+                f"Server instead")
+        self.cfg = cfg
+        self.params = params
+        self.dtype = dtype
+        self.page_size = page_size if self.mode == "paged" else 1
+        self.max_len = max_len                    # prompt + generated cap
+        self.decode_slots = decode_slots
+        self.detokenizer = detokenizer
+        if self.mode == "paged":
+            self.pages_per_slot = -(-max_len // self.page_size)
+        else:
+            self.pages_per_slot = 1               # O(1) recurrent state
+        if n_pages is None:
+            n_pages = decode_slots * self.pages_per_slot + 1
+        self.pool = SC.PagePool(
+            cfg, n_pages, self.page_size, dtype=dtype,
+            kind="attn" if self.mode == "paged" else "state")
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            pow2_buckets(max_len)
+        if self.buckets[-1] > self.pages_per_slot * self.page_size \
+                and self.mode == "paged":
+            raise ValueError(
+                f"largest bucket {self.buckets[-1]} exceeds the per-slot "
+                f"page window {self.pages_per_slot * self.page_size}")
+        self._prefill_chunk = prefill_chunk
+        self._decode_chunk = decode_chunk
+        self._prefill_fns: Dict[int, callable] = {}     # bucket -> jit
+        self._decode_fns: Dict[int, callable] = {}      # batch -> jit
+        self.slots: List[Optional[_Slot]] = [None] * decode_slots
+        self._pending: deque = deque()
+        self._completed: List[GenerationResult] = []
+        self._results: Dict[int, GenerationResult] = {}
+        self._live_rids: set = set()
+        self._next_rid = 0
+        self._reserved = 0              # future pages owed to active slots
+        self.steps = 0
+        self._occupancy_sum = 0.0
+
+    # ----------------------------------------------------------------- #
+    # compile-cache bookkeeping
+    # ----------------------------------------------------------------- #
+
+    @property
+    def n_prefill_executables(self) -> int:
+        return len(self._prefill_fns)
+
+    @property
+    def n_decode_executables(self) -> int:
+        return len(self._decode_fns)
+
+    @property
+    def executables(self) -> int:
+        return self.n_prefill_executables + self.n_decode_executables
+
+    @property
+    def executable_budget(self) -> int:
+        """The serving compile invariant: one prefill executable per
+        prompt bucket (``"paged"``; per distinct prompt length for
+        ``"state"``, whose exact-length prefill cannot be padded) plus
+        one decode executable per decode batch size (this engine runs a
+        single fixed slot count)."""
+        if self.mode == "paged":
+            return len(self.buckets) + 1
+        return len(self._prefill_fns) + 1
+
+    def _bucket_for(self, s: int) -> int:
+        for b in self.buckets:
+            if s <= b:
+                return b
+        raise ValueError(f"prompt length {s} exceeds largest bucket "
+                         f"{self.buckets[-1]}")
+
+    def _prefill_fn(self, key: int):
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            impl = (_prefill_impl if self.mode == "paged"
+                    else _state_prefill_impl)
+            fn = jax.jit(partial(
+                impl, cfg=self.cfg, page_size=self.page_size,
+                dtype=self.dtype, attn_chunk=self._prefill_chunk))
+            self._prefill_fns[key] = fn
+        return fn
+
+    def _decode_fn(self, batch: int):
+        fn = self._decode_fns.get(batch)
+        if fn is None:
+            fn = jax.jit(partial(
+                _decode_impl, cfg=self.cfg, page_size=self.page_size,
+                kind=self.pool.kind, dtype=self.dtype,
+                attn_chunk=self._decode_chunk))
+            self._decode_fns[batch] = fn
+        return fn
+
+    # ----------------------------------------------------------------- #
+    # request lifecycle
+    # ----------------------------------------------------------------- #
+
+    def submit(self, req: GenerationRequest) -> int:
+        """Queue a request; returns its rid.  Admission into a decode
+        slot happens inside ``step()`` once the page pool can cover the
+        request's worst-case demand."""
+        s = int(np.asarray(req.prompt).shape[0])
+        if s < 1 or req.max_new_tokens < 1:
+            raise ValueError("prompt and max_new_tokens must be "
+                             "non-empty")
+        if s + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request: prompt {s} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len}")
+        if self.mode == "paged":
+            self._bucket_for(s)         # fail fast on oversized prompts
+        if req.rid is None:
+            req.rid = self._next_rid
+            self._next_rid += 1
+        else:
+            self._next_rid = max(self._next_rid, req.rid + 1)
+        if req.rid in self._live_rids:
+            raise ValueError(f"rid {req.rid} is already queued or active")
+        self._live_rids.add(req.rid)
+        self._pending.append(req)
+        return req.rid
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def done(self) -> bool:
+        return not self._pending and self.n_active == 0
+
+    def _admit(self, events) -> None:
+        """Admit head-of-line pending requests into free slots while the
+        pool can cover their worst-case page demand."""
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self._pending:
+                continue
+            req = self._pending[0]
+            S = len(req.prompt)
+            # the last sampled token is never written back, so the
+            # worst case stores S + max_new_tokens - 1 positions
+            # (recurrent state is O(1): always exactly one page)
+            total = self._pages_needed(S + req.max_new_tokens - 1)
+            if self.pool.n_free - self._reserved < total:
+                break                   # head-of-line blocking, FIFO order
+            self._pending.popleft()
+            pages = self.pool.alloc(self._pages_needed(S))
+            self._reserved += total - len(pages)
+            slot = _Slot(req=req, length=0, pages=pages, total_pages=total)
+            self.slots[i] = slot
+            tok = self._run_prefill(slot)
+            slot.length = S
+            self._emit(i, slot, tok, events)
+
+    def _run_prefill(self, slot: _Slot) -> int:
+        S = len(slot.req.prompt)
+        row = np.full((1, self.pages_per_slot), SC.NULL_PAGE, np.int32)
+        row[0, :len(slot.pages)] = slot.pages
+        if self.mode == "paged":
+            bucket = self._bucket_for(S)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :S] = slot.req.prompt
+            fn = self._prefill_fn(bucket)
+        else:
+            # exact-length prefill: right-padding would run the
+            # recurrent scan over padding tokens and corrupt the state
+            toks = np.asarray(slot.req.prompt, np.int32)[None]
+            fn = self._prefill_fn(S)
+        tok, self.pool.kv = fn(self.params, self.pool.kv,
+                               jnp.asarray(toks),
+                               jnp.asarray([S], jnp.int32),
+                               jnp.asarray(row))
+        return int(np.asarray(tok)[0, 0])
+
+    def _emit(self, i: int, slot: _Slot, tok: int, events) -> None:
+        slot.out.append(tok)
+        slot.last_token = tok
+        eos = (slot.req.eos_id is not None and tok == slot.req.eos_id)
+        done = eos or len(slot.out) >= slot.req.max_new_tokens
+        events.append((slot.req.rid, tok, done))
+        if done:
+            self._finish(i, "eos" if eos else "length")
+
+    def _finish(self, i: int, reason: str) -> None:
+        slot = self.slots[i]
+        self.pool.free(slot.pages)
+        self._reserved -= slot.total_pages - len(slot.pages)
+        toks = np.asarray(slot.out, np.int32)
+        res = GenerationResult(
+            rid=slot.req.rid, tokens=toks, finish_reason=reason,
+            prompt_len=len(slot.req.prompt),
+            text=(self.detokenizer(toks.tolist())
+                  if self.detokenizer else None))
+        self._completed.append(res)
+        self._results[slot.req.rid] = res
+        self._live_rids.discard(slot.req.rid)
+        self.slots[i] = None
+
+    def _pages_needed(self, n_tokens: int) -> int:
+        """Worst-case pages for ``n_tokens``: token-granular for the
+        paged mode, exactly one fixed-size state page for recurrent."""
+        if self.mode == "state":
+            return 1
+        return self.pool.pages_for(n_tokens)
+
+    def _grow_pages(self) -> None:
+        """Lazy allocation: a slot gets its next page only when the next
+        write would cross into it (covered by the admit reservation).
+        State slots never grow — their page holds O(1) state."""
+        if self.mode == "state":
+            return
+        for slot in self.slots:
+            if slot is None:
+                continue
+            if slot.length >= len(slot.pages) * self.page_size:
+                slot.pages.extend(self.pool.alloc(1))
+                self._reserved -= 1
+
+    # ----------------------------------------------------------------- #
+    # the step loop
+    # ----------------------------------------------------------------- #
+
+    def step(self) -> List[Tuple[int, int, bool]]:
+        """One engine step: admit + prefill new requests, then one decode
+        step over every slot.  Returns (rid, token, finished) streaming
+        events in emission order."""
+        events: List[Tuple[int, int, bool]] = []
+        self._admit(events)
+        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return events
+        self._grow_pages()
+        B = self.decode_slots
+        pages = np.full((B, self.pages_per_slot), SC.NULL_PAGE, np.int32)
+        lengths = np.zeros((B,), np.int32)
+        toks = np.zeros((B, 1), np.int32)
+        for i, slot in active:
+            pages[i, :len(slot.pages)] = slot.pages
+            lengths[i] = slot.length
+            toks[i, 0] = slot.last_token
+        fn = self._decode_fn(B)
+        nxt, self.pool.kv = fn(self.params, self.pool.kv,
+                               jnp.asarray(pages), jnp.asarray(lengths),
+                               jnp.asarray(toks))
+        nxt = np.asarray(nxt)
+        for i, slot in active:
+            slot.length += 1
+            self._emit(i, slot, int(nxt[i, 0]), events)
+        self.steps += 1
+        self._occupancy_sum += len(active) / self.decode_slots
+        return events
+
+    def drain(self, max_steps: Optional[int] = None) \
+            -> List[GenerationResult]:
+        """Step until every queued request finishes; returns the results
+        completed since the last drain, in completion order."""
+        n = 0
+        while not self.done:
+            self.step()
+            n += 1
+            if max_steps is not None and n >= max_steps:
+                raise RuntimeError(f"engine not drained after {n} steps")
+        out, self._completed = self._completed, []
+        return out
+
+    def result(self, rid: int) -> Optional[GenerationResult]:
+        return self._results.get(rid)
+
+    def generate(self, tokens: np.ndarray, n_new: int, *,
+                 eos_id: Optional[int] = None) -> np.ndarray:
+        """Synchronous compatibility wrapper over submit/drain matching
+        the blocking ``Server.generate`` contract: tokens (B, S) prompt
+        rows, returns (B, n_new) greedy ids (rows that hit ``eos_id``
+        early are zero-padded)."""
+        tokens = np.asarray(tokens)
+        rids = [self.submit(GenerationRequest(
+            prompt=tokens[b].astype(np.int32), max_new_tokens=n_new,
+            eos_id=eos_id)) for b in range(tokens.shape[0])]
+        self.drain()
+        out = np.zeros((tokens.shape[0], n_new), np.int32)
+        for b, rid in enumerate(rids):
+            got = self._results[rid].tokens
+            out[b, :len(got)] = got
+        return out
+
+    # ----------------------------------------------------------------- #
+    # maintenance
+    # ----------------------------------------------------------------- #
+
+    def defrag(self) -> None:
+        """Compact live pages to the low pool ids (one device gather);
+        active slots' page tables are rewritten in place."""
+        self.pool.defrag([s.pages for s in self.slots if s is not None])
+
+    def reset(self) -> None:
+        """Drop all requests and free every page; compiled executables
+        are kept (the compile cache is the expensive part)."""
+        for i, slot in enumerate(self.slots):
+            if slot is not None:
+                self._finish(i, "reset")
+        self._pending.clear()
+        self._completed.clear()
+        self._results.clear()
+        self._live_rids.clear()
+        self.steps = 0
+        self._occupancy_sum = 0.0
+        assert self._reserved == 0 and self.pool.n_used == 0
+
+    def mean_occupancy(self) -> float:
+        return self._occupancy_sum / max(self.steps, 1)
+
+
+# --------------------------------------------------------------------- #
+# jitted bodies (module-level so partials stay hashable/stable)
+# --------------------------------------------------------------------- #
+
+def _greedy(logits):
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+def _prefill_impl(params, pool_kv, tokens, lengths, pages_row, *, cfg,
+                  page_size, dtype, attn_chunk):
+    """Prefill one request (B=1), scatter its K/V into its pages, and
+    greedy-sample the first token — fused into one executable per
+    prompt bucket."""
+    logits, k, v = R.prefill_ragged(params, cfg, tokens, lengths,
+                                    dtype=dtype, attn_chunk=attn_chunk)
+    pool_kv = SC.scatter_prefill(pool_kv, k, v, pages_row, lengths,
+                                 page_size=page_size)
+    return _greedy(logits), pool_kv
+
+
+def _state_prefill_impl(params, pool_kv, tokens, lengths, pages_row, *,
+                        cfg, page_size, dtype, attn_chunk):
+    """Exact-length prefill for a recurrent family: run the family
+    prefill and scatter the resulting state into the request's pool
+    row."""
+    del lengths, page_size, attn_chunk          # exact length, O(1) state
+    logits, cache = R.prefill(params, cfg, tokens, dtype=dtype)
+    pool_kv = SC.scatter_state(pool_kv, cache.data, pages_row[:, 0])
+    return _greedy(logits), pool_kv
+
+
+def _decode_impl(params, pool_kv, pages, lengths, token, *, cfg,
+                 page_size, kind, dtype, attn_chunk):
+    """One fixed-shape decode step over every slot + greedy sampling —
+    the redesigned ``registry.decode_step`` with a ``PagedKVCache``."""
+    cache = SC.PagedKVCache(kv=pool_kv, pages=pages, lengths=lengths,
+                            page_size=page_size, kind=kind)
+    logits, new_cache = R.decode_step(params, cfg, cache, token,
+                                      dtype=dtype, attn_chunk=attn_chunk)
+    return _greedy(logits), new_cache.kv

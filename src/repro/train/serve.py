@@ -1,8 +1,28 @@
-"""Batched serving runtime: prefill + greedy/temperature decode loop over
-the KV-cache step functions, with a per-(batch, prompt-len) compiled
-cache mirroring the trainer's per-batch-size cache."""
+"""Blocking batched serving over the typed KV caches: prefill + a
+greedy/temperature decode loop against ``registry.decode_step``.
+
+The prefill compile cache is bounded by prompt-length bucketing: prompts
+are right-padded to a small power-of-two ladder of bucket lengths and run
+through the ragged prefill (``registry.prefill_ragged``), which gathers
+each request's last *real* token for the logits — so the cache is keyed
+by (batch, bucket) instead of (batch, prompt-len) and two prompt lengths
+in the same bucket reuse one executable.  Families without a ragged
+prefill (ring-cache sliding windows, SSM, hybrid, enc-dec) keep the
+legacy exact-length path.
+
+This dense ``Server`` is the oracle the paged continuous-batching engine
+(``repro.serving.ServingEngine``) is pinned against — same params, same
+prompts must yield identical greedy tokens.  For new code it is also
+deprecated in that engine's favor: ``generate()`` blocks the whole batch
+on its slowest request and pads every prompt to a shared length, where
+``ServingEngine.submit()/step()/drain()`` streams each request
+independently.  The old ``generate(tokens, n_new)`` signature keeps
+working (with a ``DeprecationWarning``) for callers that want the
+simple blocking contract — including families the engine cannot serve.
+"""
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -11,36 +31,100 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry as R
+from repro.serving import DenseKVCache, pow2_buckets
+
+
+def _bucketed_prefill(params, tokens, lengths, prefix_emb, *, cfg,
+                      cache_len_cap, dtype):
+    """Ragged prefill + dense-cache assembly: pad the raw per-layer K/V
+    out to the cache cap.  Rows beyond ``lengths`` hold padding junk the
+    decode attention masks via ``kv_len`` — exactly like the zero rows
+    the legacy path padded in."""
+    logits, k, v = R.prefill_ragged(params, cfg, tokens, lengths,
+                                    prefix_emb=prefix_emb, dtype=dtype)
+    pad = cache_len_cap - k.shape[2]
+    cfgp = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+    data = {"k": jnp.pad(k, cfgp), "v": jnp.pad(v, cfgp)}
+    return logits, DenseKVCache(data=data, lengths=lengths)
 
 
 class Server:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 4096,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, buckets=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.dtype = dtype
+        self.bucketed = R.supports_paged(cfg)
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            pow2_buckets(max_len)
+        self._prefill_fns = {}          # (batch, bucket) -> jit
         self._prefill = jax.jit(partial(
-            R.prefill, cfg=cfg, cache_len_cap=max_len, dtype=dtype),
-            static_argnames=())
+            R.prefill, cfg=cfg, cache_len_cap=max_len, dtype=dtype))
         self._decode = jax.jit(partial(
             R.decode_step, cfg=cfg, dtype=dtype))
+
+    @property
+    def n_prefill_executables(self) -> int:
+        """Distinct prefill executables on the bucketed path — bounded
+        by #batch-sizes x #buckets, not by distinct prompt lengths."""
+        return len(self._prefill_fns)
+
+    def _bucket_for(self, s: int) -> int:
+        for b in self.buckets:
+            if s <= b:
+                return b
+        raise ValueError(f"prompt length {s} exceeds largest bucket "
+                         f"{self.buckets[-1]}")
+
+    def _prefill_bucketed(self, tokens, prefix_emb):
+        B, S = tokens.shape
+        n_prefix = 0 if prefix_emb is None else prefix_emb.shape[1]
+        bucket = self._bucket_for(S)
+        if n_prefix + bucket > self.max_len:
+            raise ValueError(
+                f"prompt bucket {bucket} (+{n_prefix} prefix) exceeds "
+                f"max_len {self.max_len}")
+        padded = jnp.pad(tokens, ((0, 0), (0, bucket - S)))
+        lengths = jnp.full((B,), n_prefix + S, jnp.int32)
+        key = (B, bucket)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            fn = jax.jit(partial(_bucketed_prefill, cfg=self.cfg,
+                                 cache_len_cap=self.max_len,
+                                 dtype=self.dtype))
+            self._prefill_fns[key] = fn
+        return fn(self.params, padded, lengths, prefix_emb)
 
     def generate(self, tokens: np.ndarray, n_new: int, *,
                  prefix_emb=None, temperature: float = 0.0,
                  seed: int = 0) -> np.ndarray:
-        """tokens: (B, S) prompt.  Returns (B, n_new) generated ids."""
+        """tokens: (B, S) prompt.  Returns (B, n_new) generated ids.
+
+        .. deprecated:: blocking whole-batch generation; prefer
+           ``serving.ServingEngine`` (submit/step/drain), which serves
+           ragged prompts and generation budgets without padding the
+           batch or blocking on its slowest member."""
+        warnings.warn(
+            "Server.generate blocks the whole batch on its slowest "
+            "request; prefer serving.ServingEngine.submit()/drain() "
+            "(Server remains the dense parity oracle and the path for "
+            "families without a paged/state serving mode)",
+            DeprecationWarning, stacklevel=2)
         tokens = jnp.asarray(tokens, jnp.int32)
-        logits, cache, ln = self._prefill(
-            params=self.params, tokens=tokens, prefix_emb=prefix_emb)
+        if self.bucketed:
+            logits, cache = self._prefill_bucketed(tokens, prefix_emb)
+        else:
+            logits, cache = self._prefill(
+                params=self.params, tokens=tokens, prefix_emb=prefix_emb)
         key = jax.random.PRNGKey(seed)
         out = []
         tok = self._sample(logits, temperature, key)
         out.append(tok)
-        for i in range(n_new - 1):
+        for _ in range(n_new - 1):
             key, sub = jax.random.split(key)
-            logits, cache, ln = self._decode(
-                params=self.params, cache=cache, cache_len=ln, token=tok)
+            logits, cache = self._decode(
+                params=self.params, cache=cache, token=tok)
             tok = self._sample(logits, temperature, sub)
             out.append(tok)
         return np.asarray(jnp.concatenate(out, axis=1))

@@ -251,6 +251,68 @@ class TestSSDGrads:
         _assert_grads_close(got, want, atol=1e-6)
 
 
+class TestRaggedPagedAttention:
+    """The serving decode kernel: one query token per request against
+    that request's ragged KV depth (``lengths[b]`` cached tokens plus
+    the just-written one).  The xla entry is bitwise-pinned to the dense
+    decode path in tests/test_serving.py; here the Pallas kernel
+    (interpret mode) is held against that xla oracle."""
+
+    @pytest.mark.parametrize("B,H,Hkv,hd,Skv", [
+        (2, 2, 2, 32, 64),      # MHA
+        (3, 4, 2, 32, 40),      # GQA, ragged Skv vs block_k
+        (2, 4, 1, 64, 128),     # MQA, block-aligned
+    ])
+    def test_matches_xla_oracle(self, B, H, Hkv, hd, Skv):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), jnp.float32)
+        # depths: first decode (0), a block boundary, and the deepest
+        lengths = jnp.asarray([0, min(Skv - 1, 31), Skv - 1][:B],
+                              jnp.int32)
+        want = KB.paged_decode_attention(q, k, v, lengths,
+                                         backend="xla")
+        got = KB.paged_decode_attention(q, k, v, lengths,
+                                        backend="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_block_k_independence(self):
+        from repro.kernels.paged import ragged_decode_attention
+        ks = jax.random.split(KEY, 3)
+        B, H, Hkv, hd, Skv = 2, 2, 1, 32, 96
+        q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hkv, Skv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hkv, Skv, hd), jnp.float32)
+        lengths = jnp.asarray([17, 90], jnp.int32)
+        o1 = ragged_decode_attention(q, k, v, lengths, block_k=32,
+                                     interpret=True)
+        o2 = ragged_decode_attention(q, k, v, lengths, block_k=96,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_stale_tail_masked(self):
+        """Positions beyond lengths[b] must not leak into the output —
+        the serving pool reuses pages without zeroing them."""
+        ks = jax.random.split(KEY, 3)
+        B, H, Hkv, hd, Skv = 2, 2, 2, 32, 64
+        q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), jnp.float32)
+        lengths = jnp.asarray([7, 33], jnp.int32)
+        mask = (jnp.arange(Skv)[None, :, None, None]
+                <= lengths[:, None, None, None])
+        a = KB.paged_decode_attention(q, k, v, lengths,
+                                      backend="pallas_interpret")
+        b = KB.paged_decode_attention(
+            q, jnp.where(mask, k, 1e3), jnp.where(mask, v, -1e3),
+            lengths, backend="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
 class TestBackendRegistry:
     def test_resolve_rejects_unknown(self):
         with pytest.raises(ValueError, match="kernel backend"):

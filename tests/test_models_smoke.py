@@ -78,10 +78,10 @@ def test_prefill_decode_matches_forward(name):
     h, _ = R.forward_hidden(params, cfg, toks, prefix_emb=prefix,
                             remat=False, dtype=jnp.float32)
     want = logits_from_hidden(params, cfg, h[:, -1:])
-    _, cache, ln = R.prefill(params, cfg, toks[:, :S], prefix_emb=prefix,
-                             cache_len_cap=128, dtype=jnp.float32)
-    got, _, _ = R.decode_step(params, cfg, cache, ln, toks[:, S:S + 1],
-                              dtype=jnp.float32)
+    _, cache = R.prefill(params, cfg, toks[:, :S], prefix_emb=prefix,
+                         cache_len_cap=128, dtype=jnp.float32)
+    got, _ = R.decode_step(params, cfg, cache, toks[:, S:S + 1],
+                           dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-3, rtol=2e-3)
 
@@ -92,19 +92,16 @@ def test_multi_step_decode_finite(name):
     cfg = REDUCED[name]
     params = R.init_params(jax.random.PRNGKey(2), cfg)
     d = R.concrete_inputs(cfg, "prefill", 2, 16)
-    logits, cache, ln = R.prefill(params, cfg, d["tokens"],
-                                  prefix_emb=d.get("prefix_emb"),
-                                  cache_len_cap=64)
+    logits, cache = R.prefill(params, cfg, d["tokens"],
+                              prefix_emb=d.get("prefix_emb"),
+                              cache_len_cap=64)
     tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     for _ in range(4):
-        logits, cache, ln = R.decode_step(params, cfg, cache, ln, tok)
+        logits, cache = R.decode_step(params, cfg, cache, tok)
         assert bool(jnp.isfinite(logits).all())
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    assert int(ln) == 16 + 4 + (cfg.frontend_tokens
-                                if cfg.arch_type in ("audio", "encdec")
-                                else 0) - (cfg.frontend_tokens
-                                           if cfg.arch_type in
-                                           ("audio", "encdec") else 0)
+    # the cache tracks its own per-request depths now
+    assert np.asarray(cache.lengths).tolist() == [16 + 4] * 2
 
 
 def test_param_specs_cover_params():

@@ -1,0 +1,814 @@
+"""Serving subsystem tests: paged KV cache + continuous-batching engine.
+
+Every full-model numeric claim is *bitwise* (``np.array_equal``), not
+approximate: the paged xla decode path is built so masked positions
+score exactly -1e30, exp underflows to exactly 0.0, and stale page
+contents sit beyond the causal reach — so a paged lookup and a dense
+cache must produce identical logits.  Coverage:
+
+- ``PagePool`` allocator bookkeeping (LIFO reuse, null-page
+  reservation, ``OutOfPages``, double-free, defrag remapping).
+- Scatter/gather layout roundtrip through the fused head-interleaved
+  pool, page sizes {1, 4, 16}.
+- Ragged decode attention vs per-request dense ``chunked_attention``
+  at page-count boundaries and GQA head ratios (the interpret-mode
+  Pallas parity lives in tests/test_kernels.py).
+- The typed-cache API: ``registry.prefill`` returns a
+  ``DenseKVCache``, ``decode_step`` dispatches on the cache type and
+  rejects raw pytrees.
+- Full-model paged decode (``PagedKVCache`` through
+  ``registry.decode_step``) vs solo dense prefill+decode.
+- ``ServingEngine`` under directed admit/evict schedules — queueing,
+  EOS eviction, staggered arrivals, mid-decode defrag, a pool small
+  enough to serialize — always bitwise against the solo dense
+  ``Server`` oracle, with pages drained and the executable budget
+  held.
+- The recurrent ("state") serving mode: an SSM engine against the
+  dense Server oracle.
+- The request API: rid assignment, results, detokenizer text,
+  completion order, the ``generate()`` compat wrapper, and the
+  ``Server.generate`` deprecation.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import backend as KB
+from repro.models import registry as R
+from repro.models.attention import chunked_attention
+from repro.serving import (DenseKVCache, GenerationRequest, KVCache,
+                           OutOfPages, ServingEngine, pow2_buckets)
+from repro.serving import cache as SC
+from repro.train.serve import Server
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+
+def tiny_cfg(n_heads=2, n_kv_heads=1, **kw):
+    base = dict(name="serve-tiny", arch_type="dense", n_layers=2,
+                d_model=32, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                head_dim=8, d_ff=64, vocab_size=64, max_seq_len=128,
+                rope_theta=1e4)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFG = tiny_cfg()
+MAX_LEN = 32
+
+SSM_CFG = ModelConfig(name="serve-ssm", arch_type="ssm", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=1, head_dim=8,
+                      d_ff=64, vocab_size=64, max_seq_len=64,
+                      rope_theta=1e4,
+                      ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                    head_dim=16, chunk_size=16))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return R.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def engine(params):
+    """One shared engine — the compile cache is the expensive part, and
+    reusing it across tests is itself part of the contract (reset()
+    keeps executables)."""
+    return ServingEngine(CFG, params, decode_slots=2, page_size=4,
+                         max_len=MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def oracle(params, engine):
+    """Solo dense Server sized to the engine's per-slot page window."""
+    return Server(CFG, params,
+                  max_len=engine.pages_per_slot * engine.page_size,
+                  buckets=engine.buckets)
+
+
+def solo(oracle, prompt, max_new, eos_id=None):
+    """The oracle answer: one dense run of this request alone,
+    truncated after the first EOS token."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = oracle.generate(np.asarray(prompt)[None], max_new)[0]
+    if eos_id is not None:
+        hits = np.flatnonzero(out == eos_id)
+        if hits.size:
+            out = out[:hits[0] + 1]
+    return out
+
+
+def run_engine(engine, reqs, max_steps=300):
+    for r in reqs:
+        engine.submit(r)
+    engine.drain(max_steps=max_steps)
+    return {r.rid: engine.result(r.rid).tokens for r in reqs}
+
+
+def check_drained(engine):
+    assert engine.done
+    assert engine.pool.n_used == 0, "pages leaked after drain"
+    assert engine._reserved == 0, "reservation leaked after drain"
+    assert engine.executables <= engine.executable_budget, (
+        f"{engine.executables} executables exceed budget "
+        f"{engine.executable_budget}")
+
+
+def prompts_rng(seed, sizes, vocab=CFG.vocab_size):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, (s,)).astype(np.int32)
+            for s in sizes]
+
+
+# --------------------------------------------------------------------- #
+# allocator bookkeeping
+# --------------------------------------------------------------------- #
+
+class TestPagePool:
+    def _pool(self, n_pages=8, page_size=4):
+        return SC.PagePool(tiny_cfg(), n_pages, page_size)
+
+    def test_null_page_never_allocated(self):
+        pool = self._pool()
+        got = pool.alloc(pool.capacity)
+        assert SC.NULL_PAGE not in got
+        assert sorted(got) == list(range(1, pool.n_pages))
+
+    def test_lifo_reuse(self):
+        pool = self._pool()
+        a = pool.alloc(3)
+        pool.free([a[-1]])
+        assert pool.alloc(1) == [a[-1]]     # hot page comes back first
+
+    def test_out_of_pages(self):
+        pool = self._pool(n_pages=4)
+        pool.alloc(3)
+        with pytest.raises(OutOfPages):
+            pool.alloc(1)
+
+    def test_double_free_and_invalid_free(self):
+        pool = self._pool()
+        (p,) = pool.alloc(1)
+        pool.free([p])
+        with pytest.raises(ValueError):
+            pool.free([p])
+        with pytest.raises(ValueError):
+            pool.free([SC.NULL_PAGE])
+        with pytest.raises(ValueError):
+            pool.free([pool.n_pages])
+
+    def test_occupancy_accounting(self):
+        pool = self._pool(n_pages=9)
+        assert pool.capacity == 8 and pool.n_used == 0
+        got = pool.alloc(4)
+        assert pool.n_used == 4 and pool.occupancy() == 0.5
+        pool.free(got)
+        assert pool.n_used == 0 and pool.n_free == pool.capacity
+
+    def test_pages_for(self):
+        pool = self._pool(page_size=4)
+        assert pool.pages_for(0) == 1       # a slot always owns a page
+        assert pool.pages_for(4) == 1
+        assert pool.pages_for(5) == 2
+        assert pool.pages_for(8) == 2
+
+    def test_invalid_pools_rejected(self):
+        with pytest.raises(ValueError):
+            SC.PagePool(tiny_cfg(), 1, 4)
+        with pytest.raises(ValueError):
+            SC.PagePool(tiny_cfg(), 4, 0)
+        with pytest.raises(ValueError):
+            SC.PagePool(tiny_cfg(), 4, 4, kind="bogus")
+        with pytest.raises(ValueError):     # state pools are page_size 1
+            SC.PagePool(SSM_CFG, 4, 4, kind="state")
+
+
+# --------------------------------------------------------------------- #
+# layout roundtrip
+# --------------------------------------------------------------------- #
+
+def test_interleave_roundtrip():
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(3, 5, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(3, 5, 2, 8)), jnp.float32)
+    kv = SC.kv_interleave(k, v)
+    assert kv.shape == (3, 5, 4, 8)
+    # head h's K at 2h, V at 2h+1
+    assert np.array_equal(np.asarray(kv[..., 0, :]),
+                          np.asarray(k[..., 0, :]))
+    assert np.array_equal(np.asarray(kv[..., 1, :]),
+                          np.asarray(v[..., 0, :]))
+    k2, v2 = SC.kv_deinterleave(kv)
+    assert np.array_equal(np.asarray(k2), np.asarray(k))
+    assert np.array_equal(np.asarray(v2), np.asarray(v))
+
+
+@pytest.mark.parametrize("page_size", [1, 4, 16])
+def test_scatter_gather_roundtrip(page_size):
+    """Prompt K/V written through the pool and gathered back is bitwise
+    the original for every row < length; bucket-padding rows land in the
+    null page and touch no allocated page."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(1)
+    L, B, S = cfg.n_layers, 2, 19
+    lengths = np.asarray([19, 7], np.int32)
+    n_pages = 2 * B * -(-S // page_size) + 1
+    pool = SC.PagePool(cfg, n_pages=n_pages, page_size=page_size,
+                       dtype=jnp.float32)
+    P = pool.pages_for(S)
+    tables = [pool.alloc(P) for _ in range(B)]
+    pages = jnp.asarray(tables, jnp.int32)
+    k = jnp.asarray(rng.normal(size=(L, B, S, cfg.n_kv_heads,
+                                     cfg.head_dim)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=k.shape), jnp.float32)
+    kv = SC.scatter_prefill(pool.kv, k, v, pages,
+                            jnp.asarray(lengths), page_size=page_size)
+    for layer in range(L):
+        gk, gv = SC.gather_pages(kv[layer], pages, page_size=page_size)
+        for b in range(B):
+            n = lengths[b]
+            assert np.array_equal(np.asarray(gk[b, :n]),
+                                  np.asarray(k[layer, b, :n]))
+            assert np.array_equal(np.asarray(gv[b, :n]),
+                                  np.asarray(v[layer, b, :n]))
+    # rows past each request's length went to the null page, not into
+    # any allocated page: request 1's pages hold zeros beyond row 7
+    off = int(lengths[1])
+    flat = np.asarray(kv[0][jnp.asarray(tables[1])]).reshape(
+        P * page_size, -1)
+    assert flat[:off].any()
+    assert np.all(flat[off:] == 0.0)
+
+
+# --------------------------------------------------------------------- #
+# ragged attention vs dense oracle — bitwise
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("H,Hkv", [(2, 2), (4, 2), (4, 1)])
+def test_ragged_attention_bitwise_vs_dense(H, Hkv):
+    """Batched per-request lookup == per-request scalar dense attention,
+    bitwise, at ragged depths including page boundaries."""
+    rng = np.random.default_rng(2)
+    B, hd, Skv = 4, 16, 33
+    # positions: 0 (first decode), exact page fills for ps in {1,4,16},
+    # and one mid-page
+    lengths = np.asarray([0, 4, 16, 31], np.int32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, Hkv, hd)), jnp.float32)
+    out = KB.paged_decode_attention(q, k, v, jnp.asarray(lengths),
+                                    backend="xla")
+    for b in range(B):
+        n = int(lengths[b])
+        ref = chunked_attention(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                causal=True, q_offset=n, kv_len=n + 1,
+                                chunk=4096)
+        assert np.array_equal(np.asarray(ref[0]), np.asarray(out[b]))
+
+
+def test_ragged_attention_ignores_stale_tail():
+    """Garbage beyond lengths[b] — stale page contents — cannot change
+    the result: zeroing the tail gives bitwise-identical output."""
+    rng = np.random.default_rng(3)
+    B, H, Hkv, hd, Skv = 2, 2, 1, 8, 24
+    lengths = jnp.asarray([5, 11], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=k.shape), jnp.float32)
+    mask = (jnp.arange(Skv)[None, :, None, None]
+            <= lengths[:, None, None, None])
+    a = KB.paged_decode_attention(q, k, v, lengths, backend="xla")
+    b = KB.paged_decode_attention(q, jnp.where(mask, k, 0.0),
+                                  jnp.where(mask, v, 0.0), lengths,
+                                  backend="xla")
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# the typed-cache API
+# --------------------------------------------------------------------- #
+
+def test_prefill_returns_typed_cache(params):
+    toks = jnp.asarray(prompts_rng(8, [6, 6]), jnp.int32)
+    logits, cache = R.prefill(params, CFG, toks, cache_len_cap=16)
+    assert isinstance(cache, DenseKVCache)
+    assert isinstance(cache, KVCache)       # the protocol
+    assert np.asarray(cache.lengths).tolist() == [6, 6]
+    logits, cache = R.decode_step(
+        params, CFG, cache,
+        jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32))
+    assert isinstance(cache, DenseKVCache)
+    assert np.asarray(cache.lengths).tolist() == [7, 7]
+
+
+def test_decode_step_rejects_raw_cache(params):
+    tok = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(TypeError):
+        R.decode_step(params, CFG, {"k": None, "v": None}, tok)
+
+
+def test_paged_cache_is_pytree():
+    """Static fields (page_size, kind) key executables; array fields
+    flow through tree ops."""
+    c = SC.PagedKVCache(kv=jnp.zeros((1, 2, 4, 2, 8)),
+                        pages=jnp.zeros((1, 2), jnp.int32),
+                        lengths=jnp.zeros((1,), jnp.int32),
+                        page_size=4, kind="attn")
+    leaves, treedef = jax.tree.flatten(c)
+    assert len(leaves) == 3
+    c2 = jax.tree.unflatten(treedef, leaves)
+    assert c2.page_size == 4 and c2.kind == "attn"
+    assert isinstance(c2, KVCache)
+
+
+# --------------------------------------------------------------------- #
+# full-model step parity — paged vs solo dense, bitwise logits
+# --------------------------------------------------------------------- #
+
+def _dense_solo_logits(cfg, params, prompt, n_steps, cap, dtype):
+    """Per-request dense oracle: exact-length prefill + decode_step."""
+    toks = jnp.asarray(prompt[None], jnp.int32)
+    logits, cache = R.prefill(params, cfg, toks, cache_len_cap=cap,
+                              dtype=dtype)
+    outs = [np.asarray(logits[:, -1], np.float32)]
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(n_steps):
+        logits, cache = R.decode_step(params, cfg, cache, tok,
+                                      dtype=dtype)
+        outs.append(np.asarray(logits[:, -1], np.float32))
+        tok = jnp.argmax(logits[:, -1],
+                         axis=-1)[:, None].astype(jnp.int32)
+    return outs
+
+
+@pytest.mark.parametrize("page_size,H,Hkv", [
+    (1, 4, 2),          # one token per page: growth every step
+    (4, 4, 2),
+    (16, 4, 2),
+    (4, 2, 2),          # MHA
+    (4, 4, 1),          # maximal GQA fold
+])
+def test_paged_step_bitwise_vs_dense(page_size, H, Hkv):
+    """The paged decode step at ragged depths reproduces solo dense runs
+    bitwise.  Lengths are chosen so one request exactly fills its last
+    page at prefill and another crosses into a fresh page mid-decode."""
+    cfg = tiny_cfg(n_heads=H, n_kv_heads=Hkv)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    dtype = jnp.bfloat16
+    n_steps = max(page_size + 1, 4)     # guarantees a page crossing
+    # request 0 exactly fills pages at prefill; request 1 is one short
+    # of a boundary, so its first decode write opens a fresh page
+    s0 = 2 * page_size
+    s1 = max(2 * page_size - 1, 1)
+    prompts = [rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (s0, s1)]
+    B = len(prompts)
+    smax = max(s0, s1)
+
+    pool = SC.PagePool(cfg, n_pages=64, page_size=page_size, dtype=dtype)
+    per_req = pool.pages_for(smax + n_steps)
+    tables = [pool.alloc(per_req) for _ in range(B)]
+    pages = jnp.asarray(tables, jnp.int32)
+    lengths = np.asarray([s0, s1], np.int32)
+    padded = np.zeros((B, smax), np.int32)
+    for b, p in enumerate(prompts):
+        padded[b, :len(p)] = p
+
+    logits, k, v = R.prefill_ragged(params, cfg, jnp.asarray(padded),
+                                    jnp.asarray(lengths), dtype=dtype)
+    pool_kv = SC.scatter_prefill(pool.kv, k, v, pages,
+                                 jnp.asarray(lengths),
+                                 page_size=page_size)
+    paged = [np.asarray(logits[:, -1], np.float32)]
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    ln = jnp.asarray(lengths)
+
+    def step_body(pkv, lg, t):
+        cache = SC.PagedKVCache(kv=pkv, pages=pages, lengths=lg,
+                                page_size=page_size, kind="attn")
+        lgts, new = R.decode_step(params, cfg, cache, t, dtype=dtype)
+        return lgts, new.kv, new.lengths
+
+    step = jax.jit(step_body)
+    for _ in range(n_steps):
+        logits, pool_kv, ln = step(pool_kv, ln, tok)
+        paged.append(np.asarray(logits[:, -1], np.float32))
+        tok = jnp.argmax(logits[:, -1],
+                         axis=-1)[:, None].astype(jnp.int32)
+
+    cap = smax + n_steps + 1
+    for b, prompt in enumerate(prompts):
+        dense = _dense_solo_logits(cfg, params, prompt, n_steps, cap,
+                                   dtype)
+        for t, (d, p) in enumerate(zip(dense, paged)):
+            assert np.array_equal(d[0], p[b]), \
+                f"req {b} step {t}: paged logits diverge from dense"
+
+
+def test_prefill_ragged_bitwise_vs_dense():
+    """Bucket-padded ragged prefill == exact-length prefill: same last
+    real-token logits, same K/V rows, bitwise."""
+    cfg = tiny_cfg()
+    params = R.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(6)
+    S, bucket = 11, 16
+    toks = rng.integers(0, cfg.vocab_size, (2, S)).astype(np.int32)
+    ref_lg, cache = R.prefill(params, cfg, jnp.asarray(toks),
+                              cache_len_cap=32)
+    padded = jnp.pad(jnp.asarray(toks), ((0, 0), (0, bucket - S)))
+    rag_lg, k, v = R.prefill_ragged(params, cfg, padded,
+                                    jnp.full((2,), S, jnp.int32))
+    assert np.array_equal(np.asarray(ref_lg), np.asarray(rag_lg))
+    assert np.array_equal(
+        np.asarray(k[:, :, :S]),
+        np.asarray(cache.data["k"][:, :, :S].astype(k.dtype)))
+    assert np.array_equal(
+        np.asarray(v[:, :, :S]),
+        np.asarray(cache.data["v"][:, :, :S].astype(v.dtype)))
+
+
+def test_prefill_ragged_unsupported_family():
+    assert not R.supports_paged(SSM_CFG)
+    with pytest.raises(NotImplementedError):
+        R.prefill_ragged(None, SSM_CFG, None, None)
+
+
+# --------------------------------------------------------------------- #
+# defrag
+# --------------------------------------------------------------------- #
+
+def test_defrag_preserves_gathered_kv():
+    """Fragment the pool (free an interleaved table), defrag, and check
+    the surviving request's gathered K/V is bitwise unchanged while its
+    table is compacted to the low ids."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(7)
+    page_size, S = 4, 12
+    pool = SC.PagePool(cfg, n_pages=16, page_size=page_size,
+                       dtype=jnp.float32)
+    P = pool.pages_for(S)
+    t0, t1 = pool.alloc(P), pool.alloc(P)
+    k = jnp.asarray(rng.normal(size=(cfg.n_layers, 2, S, cfg.n_kv_heads,
+                                     cfg.head_dim)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=k.shape), jnp.float32)
+    pool.kv = SC.scatter_prefill(pool.kv, k, v,
+                                 jnp.asarray([t0, t1], jnp.int32),
+                                 jnp.full((2,), S, jnp.int32),
+                                 page_size=page_size)
+    before = SC.gather_pages(pool.kv[0], jnp.asarray([t1], jnp.int32),
+                             page_size=page_size)
+    pool.free(t0)                        # fragment: low ids now free
+    pool.defrag([t1])
+    assert t1 == list(range(1, 1 + P))   # compacted in place
+    after = SC.gather_pages(pool.kv[0], jnp.asarray([t1], jnp.int32),
+                            page_size=page_size)
+    assert np.array_equal(np.asarray(before[0]), np.asarray(after[0]))
+    assert np.array_equal(np.asarray(before[1]), np.asarray(after[1]))
+    assert pool.n_used == P
+    # freed ids are reusable immediately after compaction
+    assert pool.alloc(pool.n_free)
+
+
+def test_defrag_rejects_duplicate_tables():
+    pool = SC.PagePool(tiny_cfg(), 8, 4)
+    t = pool.alloc(2)
+    with pytest.raises(ValueError):
+        pool.defrag([t, t])
+
+
+# --------------------------------------------------------------------- #
+# engine vs the solo dense oracle — directed schedules
+# --------------------------------------------------------------------- #
+
+def test_engine_matches_solo_oracle(engine, oracle):
+    """5 ragged requests through 2 slots: forced queueing and page
+    reuse across waves; every request bitwise equals its solo run."""
+    engine.reset()
+    sizes = [3, 16, 7, 1, 12]
+    news = [6, 4, 8, 3, 5]
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts_rng(0, sizes), news))]
+    got = run_engine(engine, reqs)
+    for r in reqs:
+        want = solo(oracle, r.prompt, r.max_new_tokens)
+        assert np.array_equal(got[r.rid], want), f"request {r.rid}"
+    check_drained(engine)
+
+
+def test_eos_eviction_frees_pages(engine, oracle):
+    """EOS mid-stream: pick each request's own 2nd generated token as
+    its eos_id, so the engine must cut generation early, evict, and
+    free pages while other slots keep decoding."""
+    engine.reset()
+    prompts = prompts_rng(1, [5, 9, 14])
+    eos = [int(solo(oracle, p, 8)[2]) for p in prompts]
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=8,
+                              eos_id=e)
+            for i, (p, e) in enumerate(zip(prompts, eos))]
+    got = run_engine(engine, reqs)
+    for r in reqs:
+        want = solo(oracle, r.prompt, r.max_new_tokens, eos_id=r.eos_id)
+        assert np.array_equal(got[r.rid], want)
+        assert len(got[r.rid]) <= 3          # actually truncated
+        assert engine.result(r.rid).finish_reason == "eos"
+    check_drained(engine)
+
+
+def test_executable_invariant_across_schedules(engine, oracle):
+    """Prompt lengths within one bucket share one prefill executable;
+    the decode executable count stays 1 across occupancy patterns."""
+    engine.reset()
+    n0 = engine.n_prefill_executables
+    # lengths 2..13 all fall in the 16-bucket
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=2)
+            for i, p in enumerate(prompts_rng(2, [2, 5, 9, 13]))]
+    run_engine(engine, reqs)
+    assert engine.n_prefill_executables - n0 <= 1
+    assert engine.n_decode_executables == 1
+    seen = engine.executables
+    # a second wave with the same buckets compiles nothing new
+    reqs = [GenerationRequest(rid=10 + i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts_rng(3, [4, 11]))]
+    run_engine(engine, reqs)
+    assert engine.executables == seen
+    check_drained(engine)
+
+
+def test_tiny_pool_serializes_head_of_line(params, oracle):
+    """A pool that fits exactly one worst-case request: admission
+    serializes, nothing deadlocks, results still match solo runs."""
+    # capacity 4 pages == the largest request's worst-case demand
+    # (pages_for(10 + 4 - 1) == 4), so admissions serialize
+    eng = ServingEngine(CFG, params, decode_slots=2, page_size=4,
+                        max_len=MAX_LEN, n_pages=5)
+    sizes = [10, 6, 3]
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts_rng(4, sizes))]
+    got = run_engine(eng, reqs)
+    for r in reqs:
+        assert np.array_equal(got[r.rid], solo(oracle, r.prompt, 4))
+    assert eng.n_active == 0 and eng.pool.n_used == 0
+    # serialization really happened: never more than one slot active
+    assert eng.mean_occupancy() <= 0.5 + 1e-9
+
+
+def test_defrag_mid_decode_is_transparent(engine, oracle):
+    """Compacting the pool between steps must not change any output."""
+    engine.reset()
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(prompts_rng(5, [8, 13, 5]))]
+    for r in reqs:
+        engine.submit(r)
+    n = 0
+    while not engine.done:
+        engine.step()
+        engine.defrag()                      # every step, mid-stream
+        n += 1
+        assert n < 200
+    for r in reqs:
+        want = solo(oracle, r.prompt, r.max_new_tokens)
+        assert np.array_equal(engine.result(r.rid).tokens, want)
+    check_drained(engine)
+
+
+def test_staggered_arrivals(engine, oracle):
+    """Requests arriving while others are mid-decode join cleanly."""
+    engine.reset()
+    prompts = prompts_rng(6, [6, 11, 4, 9])
+    arrive = [0, 0, 2, 5]
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    t, queued = 0, 0
+    while queued < len(reqs) or not engine.done:
+        while queued < len(reqs) and arrive[queued] <= t:
+            engine.submit(reqs[queued])
+            queued += 1
+        engine.step()
+        t += 1
+        assert t < 200
+    for r in reqs:
+        assert np.array_equal(engine.result(r.rid).tokens,
+                              solo(oracle, r.prompt, r.max_new_tokens))
+    check_drained(engine)
+
+
+def test_streaming_events_match_results(engine):
+    """The (rid, token, finished) stream concatenates to exactly the
+    finished results, finished flagged on the last token only."""
+    engine.reset()
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts_rng(9, [4, 8]),
+                                           [3, 5]))]
+    for r in reqs:
+        engine.submit(r)
+    streamed = {r.rid: [] for r in reqs}
+    while not engine.done:
+        for rid, tok, fin in engine.step():
+            streamed[rid].append(tok)
+            if fin:
+                assert engine.result(rid) is not None
+    for r in reqs:
+        assert streamed[r.rid] == engine.result(r.rid).tokens.tolist()
+    check_drained(engine)
+
+
+# --------------------------------------------------------------------- #
+# the recurrent ("state") serving mode
+# --------------------------------------------------------------------- #
+
+def test_state_mode_engine_matches_dense_oracle():
+    """An SSM engine — one state page per request behind the same
+    admission machinery — bitwise against the dense Server oracle."""
+    params = R.init_params(jax.random.PRNGKey(2), SSM_CFG)
+    eng = ServingEngine(SSM_CFG, params, decode_slots=2, max_len=MAX_LEN)
+    assert eng.mode == "state"
+    assert eng.page_size == 1 and eng.pages_per_slot == 1
+    srv = Server(SSM_CFG, params, max_len=MAX_LEN)
+    assert not srv.bucketed                  # ssm keeps exact-length
+    sizes, news = [3, 9, 6], [5, 3, 4]
+    reqs = [GenerationRequest(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts_rng(7, sizes), news))]
+    got = run_engine(eng, reqs)
+    for r in reqs:
+        want = solo(srv, r.prompt, r.max_new_tokens)
+        assert np.array_equal(got[r.rid], want), f"request {r.rid}"
+    # exact-length prefill: one executable per distinct prompt length
+    assert eng.n_prefill_executables == len(set(sizes))
+    assert eng.n_decode_executables == 1
+    check_drained(eng)
+
+
+# --------------------------------------------------------------------- #
+# the request API
+# --------------------------------------------------------------------- #
+
+def test_rid_assignment(params):
+    eng = ServingEngine(CFG, params, decode_slots=2, page_size=4,
+                        max_len=MAX_LEN)
+    p = prompts_rng(8, [4])[0]
+    assert eng.submit(GenerationRequest(prompt=p,
+                                        max_new_tokens=1)) == 0
+    assert eng.submit(GenerationRequest(prompt=p,
+                                        max_new_tokens=1)) == 1
+    assert eng.submit(GenerationRequest(prompt=p, max_new_tokens=1,
+                                        rid=10)) == 10
+    with pytest.raises(ValueError):          # duplicate live rid
+        eng.submit(GenerationRequest(prompt=p, max_new_tokens=1,
+                                     rid=10))
+    # explicit rids bump the auto counter past themselves
+    assert eng.submit(GenerationRequest(prompt=p,
+                                        max_new_tokens=1)) == 11
+
+
+def test_submit_validation(engine, params):
+    engine.reset()
+    with pytest.raises(ValueError):
+        engine.submit(GenerationRequest(prompt=np.zeros(0, np.int32),
+                                        max_new_tokens=1))
+    with pytest.raises(ValueError):          # 30 + 8 > max_len 32
+        engine.submit(GenerationRequest(prompt=np.zeros(30, np.int32),
+                                        max_new_tokens=8))
+    with pytest.raises(NotImplementedError):
+        # ring-cache sliding window: dense Server only
+        ServingEngine(tiny_cfg(sliding_window=8), params=None)
+
+
+def test_completion_order_and_drain(engine):
+    """drain() returns results completed since the last drain, in
+    completion order — the short request lands first even though it was
+    submitted second."""
+    engine.reset()
+    p = prompts_rng(10, [5, 5])
+    engine.submit(GenerationRequest(rid=0, prompt=p[0],
+                                    max_new_tokens=6))
+    engine.submit(GenerationRequest(rid=1, prompt=p[1],
+                                    max_new_tokens=2))
+    done = engine.drain(max_steps=50)
+    assert [r.rid for r in done] == [1, 0]
+    assert done[0].finish_reason == "length"
+    assert done[0].prompt_len == 5
+    assert engine.drain(max_steps=1) == []   # already drained
+
+
+def test_detokenizer_text(params):
+    eng = ServingEngine(CFG, params, decode_slots=2, page_size=4,
+                        max_len=MAX_LEN,
+                        detokenizer=lambda ids: " ".join(
+                            f"<{t}>" for t in ids))
+    rid = eng.submit(GenerationRequest(prompt=prompts_rng(11, [4])[0],
+                                       max_new_tokens=3))
+    (res,) = eng.drain(max_steps=20)
+    assert res.rid == rid
+    assert res.text == " ".join(f"<{t}>" for t in res.tokens)
+
+
+def test_generate_wrapper_matches_server(engine, oracle):
+    """The submit/drain compat wrapper reproduces the blocking greedy
+    Server on a uniform batch."""
+    engine.reset()
+    batch = np.stack(prompts_rng(12, [9, 9]))
+    got = engine.generate(batch, 4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        want = oracle.generate(batch, 4)
+    assert np.array_equal(got, want)
+    check_drained(engine)
+
+
+def test_server_generate_deprecated(oracle):
+    with pytest.warns(DeprecationWarning, match="ServingEngine"):
+        oracle.generate(np.zeros((1, 4), np.int32), 1)
+
+
+# --------------------------------------------------------------------- #
+# legacy Server recompile regression (satellite fix)
+# --------------------------------------------------------------------- #
+
+def test_server_bucketed_prefill_single_executable(params):
+    """Two prompt lengths in the same bucket -> ONE prefill executable,
+    and the outputs still match a manual unbucketed prefill+decode
+    loop.  This is the fix for the unbounded per-(batch, prompt-len)
+    recompile in the old Server."""
+    srv = Server(CFG, params, max_len=64)
+    outs = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for S in (8, 11):                    # same 16-bucket
+            toks = prompts_rng(13, [S, S])
+            outs[S] = srv.generate(np.stack(toks), 4)
+        assert srv.bucketed
+        assert srv.n_prefill_executables == 1
+        srv.generate(np.stack(prompts_rng(14, [20, 20])), 2)  # 32-bucket
+        assert srv.n_prefill_executables == 2
+
+    # parity with a manual unbucketed run through the typed-cache API
+    for S, got in outs.items():
+        toks = jnp.asarray(np.stack(prompts_rng(13, [S, S])), jnp.int32)
+        logits, cache = R.prefill(params, CFG, toks, cache_len_cap=64)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        want = [np.asarray(tok)]
+        for _ in range(3):
+            logits, cache = R.decode_step(params, CFG, cache, tok)
+            tok = jnp.argmax(logits[:, -1],
+                             -1)[:, None].astype(jnp.int32)
+            want.append(np.asarray(tok))
+        assert np.array_equal(got, np.concatenate(want, axis=1))
+
+
+# --------------------------------------------------------------------- #
+# randomized schedules (hypothesis; skipped when not installed)
+# --------------------------------------------------------------------- #
+
+if HAS_HYPOTHESIS:
+    SCHEDULES = st.lists(
+        st.tuples(st.integers(1, 16),        # prompt length
+                  st.integers(1, 6),         # max_new
+                  st.integers(0, 8),         # arrival step
+                  st.booleans()),            # cut at an observed token?
+        min_size=1, max_size=5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(sched=SCHEDULES, seed=st.integers(0, 2 ** 16))
+    def test_random_schedules_match_solo_runs(engine, oracle, sched,
+                                              seed):
+        """Random arrival/EOS schedules: every request equals its solo
+        dense run, pages drain to zero, executables stay bounded."""
+        engine.reset()
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for i, (S, n, at, cut) in enumerate(sched):
+            p = rng.integers(0, CFG.vocab_size, (S,)).astype(np.int32)
+            eos = None
+            if cut and n >= 2:
+                eos = int(solo(oracle, p, n)[n // 2])
+            reqs.append((at, GenerationRequest(
+                rid=i, prompt=p, max_new_tokens=n, eos_id=eos)))
+        reqs.sort(key=lambda x: x[0])
+        t, q = 0, 0
+        while q < len(reqs) or not engine.done:
+            while q < len(reqs) and reqs[q][0] <= t:
+                engine.submit(reqs[q][1])
+                q += 1
+            engine.step()
+            t += 1
+            assert t < 400
+        for _, r in reqs:
+            want = solo(oracle, r.prompt, r.max_new_tokens,
+                        eos_id=r.eos_id)
+            assert np.array_equal(engine.result(r.rid).tokens, want)
+        check_drained(engine)
+else:                                         # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_random_schedules_match_solo_runs():
+        pass
